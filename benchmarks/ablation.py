@@ -1,0 +1,66 @@
+"""Compression-recipe ablation: quant x sparsity x structural grid.
+
+Extends the paper's evaluation (which reports only the two picked
+variants) with the full design-space sweep the policy searches over:
+per recipe -> model bytes, baseline-normalized accuracy, rows/s.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (Csv, load_model, make_engine, task_accuracy,
+                               timed_rows)
+from repro.core.pipeline import InstanceOptimizer, Recipe
+from repro.training import data as D
+
+TASK = "correct"
+GRID = [
+    Recipe(name="identity"),
+    Recipe(name="w8-gptq", wbits=8),
+    Recipe(name="w8-absmax", wbits=8, quant_method="absmax"),
+    Recipe(name="w8-smooth.5", wbits=8, smooth_alpha=0.5),
+    Recipe(name="w4-gptq", wbits=4, group=64),
+    Recipe(name="24-sparse", nm=(2, 4)),
+    Recipe(name="w8+24", wbits=8, nm=(2, 4)),
+    Recipe(name="w8+ffn75", wbits=8, ffn_keep_frac=0.75),
+    Recipe(name="w8+kv50", wbits=8, kv_keep_frac=0.5),
+    Recipe(name="w8+drop1", wbits=8, drop_units=1),
+    Recipe(name="w8+emb8", wbits=8, quant_embed=True),
+    Recipe(name="bs16@75", block_bs=16, block_density=0.75),
+]
+
+
+def main(csv: Csv | None = None) -> None:
+    csv = csv or Csv()
+    cfg, params, tok = load_model()
+    rows = D.eval_rows(TASK, 32)
+    prompts = [D.PROMPTS[TASK] + r.text for r in rows]
+    sample, _ = tok.pad_batch(
+        [tok.encode(p, bos=True) for p in prompts[:16]], seq_len=96)
+    opt = InstanceOptimizer(params, cfg)
+    opt.run_calibration({"tokens": jnp.asarray(sample)})
+
+    eng = make_engine(params, cfg, tok)
+    outs, rps_base = timed_rows(eng, prompts, 12)
+    acc_base = task_accuracy(outs, rows) or 1e-9
+
+    print(f"\n=== Recipe ablation ({TASK}) ===")
+    print(f"{'recipe':14s} {'MB':>7s} {'acc':>6s} {'rows/s':>8s}")
+    for r in GRID:
+        try:
+            p2, c2, rep = opt.apply(r)
+        except Exception as e:
+            print(f"{r.name:14s} inapplicable: {e}")
+            continue
+        eng2 = make_engine(p2, c2, tok)
+        outs2, rps2 = timed_rows(eng2, prompts, 12)
+        acc2 = task_accuracy(outs2, rows) / acc_base
+        print(f"{r.name:14s} {rep.bytes_after / 1e6:7.2f} {acc2:6.2f} "
+              f"{rps2:8.2f}")
+        csv.add(f"ablation/{r.name}", 1e6 / max(rps2, 1e-9),
+                f"acc={acc2:.2f};MB={rep.bytes_after / 1e6:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Roofline report: renders results/dryrun.json into the §Roofline table.
+
+Per (arch x shape) single-pod cell: the three terms (seconds), the
+dominant bottleneck, MODEL_FLOPS / HLO_FLOPS (useful-compute ratio), and
+bytes-per-device vs the 16 GB v5e HBM budget.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+from benchmarks.common import Csv
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+HBM = 16e9
+
+
+def fmt(v: float) -> str:
+    if v >= 1:
+        return f"{v:7.2f}s"
+    if v >= 1e-3:
+        return f"{v * 1e3:6.1f}ms"
+    return f"{v * 1e6:6.0f}us"
+
+
+def load() -> Dict:
+    if not os.path.exists(RESULTS):
+        return {}
+    with open(RESULTS) as f:
+        return json.load(f)
+
+
+def main(csv: Csv | None = None, mesh: str = "single") -> None:
+    csv = csv or Csv()
+    data = load()
+    cells = {k: v for k, v in data.items() if k.endswith(":" + mesh)}
+    if not cells:
+        print(f"[roofline] no dry-run results yet at {RESULTS}")
+        return
+    print(f"\n=== Roofline ({mesh}-pod, per-device terms) ===")
+    print(f"{'arch':18s} {'shape':12s} {'st':>2s} {'t_comp':>9s} "
+          f"{'t_mem':>9s} {'t_coll':>9s} {'bound':>10s} {'useful':>7s} "
+          f"{'GB/dev':>7s} {'fits':>4s}")
+    for key in sorted(cells):
+        r = cells[key]
+        arch, shape, _ = key.split(":")
+        if r["status"] == "skipped":
+            print(f"{arch:18s} {shape:12s} -- ({r['reason'][:48]})")
+            continue
+        if r["status"] != "ok":
+            print(f"{arch:18s} {shape:12s} {r['status'].upper()}")
+            continue
+        ro = r["roofline"]
+        gb = r["bytes_per_device"] / 1e9
+        fits = "yes" if r["bytes_per_device"] <= HBM else "NO"
+        print(f"{arch:18s} {shape:12s} ok {fmt(ro['t_compute']):>9s} "
+              f"{fmt(ro['t_memory']):>9s} {fmt(ro['t_collective']):>9s} "
+              f"{ro['bound']:>10s} {r['useful_compute_frac']:7.2f} "
+              f"{gb:7.2f} {fits:>4s}")
+        csv.add(f"roofline/{arch}/{shape}",
+                max(ro["t_compute"], ro["t_memory"],
+                    ro["t_collective"]) * 1e6,
+                f"bound={ro['bound']};useful={r['useful_compute_frac']:.2f};"
+                f"GB={gb:.2f}")
+
+
+if __name__ == "__main__":
+    main()
+    main(mesh="multi")

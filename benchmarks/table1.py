@@ -1,0 +1,103 @@
+"""Paper Table 1: throughput / model size / accuracy per workload.
+
+Three workloads (summarization, data correction, fuzzy join) x three
+models (Baseline, IOLM-DB-Perf, IOLM-DB-Acc).  Accuracy is normalized to
+the baseline (baseline = 1), exactly like the paper; model size is the
+stored parameter bytes; throughput is end-to-end engine rows/s with
+batching + result caching active.
+
+The Perf/Acc variants come from the full IOLM-DB workflow: calibrate on
+a sample of the workload's own prompts -> recipe search -> pick by
+objective (core/policy.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (Csv, budget_engine, load_model, make_engine,
+                               slots_for_budget, task_accuracy, timed_rows,
+                               v5e_decode_rows_per_s)
+from repro.core import policy as POL
+from repro.core.compressed import param_bytes
+from repro.core.pipeline import InstanceOptimizer
+from repro.training import data as D
+
+N_ROWS = 48
+MAX_NEW = {"summarize": 20, "correct": 12, "join": 8}
+
+
+def optimize_for(task: str, cfg, params, tok):
+    """IOLM-DB workflow for one workload; returns {perf, acc} models."""
+    rows = D.workload_rows(task, 24, seed=5)
+    prompts = [D.PROMPTS[task] + r.text for r in rows]
+    sample = prompts[:16]
+    toks, _ = tok.pad_batch([tok.encode(p, bos=True) for p in sample],
+                            seq_len=96)
+    opt = InstanceOptimizer(params, cfg)
+    opt.run_calibration({"tokens": jnp.asarray(toks)})
+    hold = prompts[16:24]
+    htoks, hlens = tok.pad_batch(
+        [tok.encode(p, bos=True) + [tok.SEP] for p in hold], seq_len=96)
+    eval_fn = POL.make_agreement_eval(params, cfg, jnp.asarray(htoks),
+                                      max_new=MAX_NEW[task],
+                                      lengths=jnp.asarray(hlens))
+    outcome = POL.search(opt, eval_fn, POL.default_recipe_space(cfg),
+                         acc_floor=0.85, keep_params=True)
+    return outcome
+
+
+def main(csv: Csv | None = None) -> None:
+    csv = csv or Csv()
+    cfg, params, tok = load_model()
+    base_bytes = param_bytes(params)
+    # fixed accelerator memory budget: model + a handful of decode slots
+    # (mirrors the paper's H100 setup where the 14.98 GB model + vLLM KV
+    # cache share 80 GB; compression converts freed bytes into slots)
+    budget = int(base_bytes * 1.5)
+    print(f"\n=== Table 1 (baseline {base_bytes / 1e6:.1f} MB, "
+          f"memory budget {budget / 1e6:.1f} MB) ===")
+    header = (f"{'workload':14s} {'model':14s} {'size MB':>8s} "
+              f"{'acc(norm)':>9s} {'slots':>5s} {'cpu r/s':>8s} "
+              f"{'v5e r/s':>9s} {'v5e x':>6s}")
+    print(header)
+    for task in ("summarize", "correct", "join"):
+        rows = D.eval_rows(task, N_ROWS)
+        prompts = [D.PROMPTS[task] + r.text for r in rows]
+
+        # baseline
+        eng = budget_engine(params, cfg, tok, budget)
+        outs, rps_base = timed_rows(eng, prompts, MAX_NEW[task])
+        acc_base = task_accuracy(outs, rows) or 1e-9
+        v5e_base = v5e_decode_rows_per_s(params, cfg, eng.slots,
+                                         MAX_NEW[task])
+
+        outcome = optimize_for(task, cfg, params, tok)
+        variants = {"Baseline": (params, cfg, base_bytes, 1.0, rps_base,
+                                 eng.slots, v5e_base)}
+        for name, cand in (("IOLM-DB-Perf", outcome.perf),
+                           ("IOLM-DB-Acc", outcome.acc)):
+            if cand is None:
+                continue
+            eng2 = budget_engine(cand.params, cand.cfg, tok, budget)
+            outs2, rps2 = timed_rows(eng2, prompts, MAX_NEW[task])
+            acc2 = task_accuracy(outs2, rows)
+            v5e2 = v5e_decode_rows_per_s(cand.params, cand.cfg, eng2.slots,
+                                         MAX_NEW[task])
+            variants[name] = (cand.params, cand.cfg, cand.result.bytes,
+                              acc2 / acc_base, rps2, eng2.slots, v5e2)
+        for name, (_, _, nbytes, acc_norm, rps, slots,
+                   v5e) in variants.items():
+            print(f"{task:14s} {name:14s} {nbytes / 1e6:8.1f} "
+                  f"{acc_norm:9.2f} {slots:5d} {rps:8.2f} "
+                  f"{v5e:9.0f} {v5e / v5e_base:5.2f}x")
+            csv.add(f"table1/{task}/{name}", 1e6 / max(rps, 1e-9),
+                    f"acc={acc_norm:.2f};MB={nbytes / 1e6:.1f};"
+                    f"slots={slots};v5e_x={v5e / v5e_base:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: instance-optimize a model for a query in ~1 minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a small LM, calibrates it on a sample of query prompts, applies
+one compression recipe, and shows the size/agreement trade-off — the
+IOLM-DB workflow in miniature.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.compressed import param_bytes
+from repro.core.pipeline import InstanceOptimizer, Recipe
+from repro.core import policy as POL
+from repro.models import api
+from repro.training.data import ByteTokenizer, PROMPTS, workload_rows
+
+
+def main() -> None:
+    cfg = ModelConfig(name="quickstart", family="dense", n_layers=4,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=384,
+                      vocab_size=260, max_seq=256)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    tok = ByteTokenizer(cfg.vocab_size)
+    print(f"base model: {cfg.param_count() / 1e6:.2f} M params, "
+          f"{param_bytes(params) / 1e6:.2f} MB")
+
+    # 1. calibration sample — the query's own rows, prompt-formatted
+    rows = workload_rows("correct", 16)
+    prompts = [PROMPTS["correct"] + r.text for r in rows]
+    toks, lens = tok.pad_batch([tok.encode(p, bos=True) for p in prompts],
+                               seq_len=64)
+    opt = InstanceOptimizer(params, cfg)
+    opt.run_calibration({"tokens": jnp.asarray(toks)})
+    print(f"calibrated on {len(prompts)} rows "
+          f"({len(opt.stats.weights)} weight matrices observed)")
+
+    # 2. compress
+    for recipe in (Recipe(name="w8-gptq", wbits=8),
+                   Recipe(name="w8+2:4", wbits=8, nm=(2, 4)),
+                   Recipe(name="w4+ffn75", wbits=4, group=32,
+                          ffn_keep_frac=0.75)):
+        p2, c2, rep = opt.apply(recipe)
+        # 3. score agreement with the uncompressed baseline
+        eval_fn = POL.make_agreement_eval(params, cfg, jnp.asarray(toks),
+                                          max_new=8,
+                                          lengths=jnp.asarray(lens))
+        res = eval_fn(p2, c2)
+        print(f"  {rep.summary()}  token-agreement={res.token_agreement:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Serve a workload with Baseline vs IOLM-DB-Perf vs IOLM-DB-Acc.
+
+    PYTHONPATH=src python examples/serve_compressed.py --task correct
+
+Runs the full policy search for the chosen workload and serves the same
+batch of rows through all three models, printing the Table-1-style
+trade-off live.
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+
+from benchmarks.common import load_model, make_engine, task_accuracy
+from benchmarks.table1 import MAX_NEW, optimize_for
+from repro.core.compressed import param_bytes
+from repro.training import data as D
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="correct",
+                    choices=("summarize", "correct", "join"))
+    ap.add_argument("--rows", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg, params, tok = load_model()
+    rows = D.eval_rows(args.task, args.rows)
+    prompts = [D.PROMPTS[args.task] + r.text for r in rows]
+
+    outcome = optimize_for(args.task, cfg, params, tok)
+    print(outcome.table())
+
+    models = {"Baseline": (params, cfg, param_bytes(params))}
+    for nm, cand in (("IOLM-DB-Perf", outcome.perf),
+                     ("IOLM-DB-Acc", outcome.acc)):
+        if cand:
+            models[nm] = (cand.params, cand.cfg, cand.result.bytes)
+
+    print(f"\nserving {len(prompts)} rows of '{args.task}':")
+    base_rps = None
+    for nm, (p, c, nbytes) in models.items():
+        eng = make_engine(p, c, tok)
+        t0 = time.time()
+        outs = eng.generate(prompts, max_new=MAX_NEW[args.task])
+        rps = len(prompts) / (time.time() - t0)
+        base_rps = base_rps or rps
+        acc = task_accuracy(outs, rows)
+        print(f"  {nm:14s} {nbytes / 1e6:7.2f} MB  acc={acc:.2f}  "
+              f"{rps:6.2f} rows/s ({rps / base_rps:.2f}x)  "
+              f"e.g. {outs[0]!r}")
+
+
+if __name__ == "__main__":
+    main()

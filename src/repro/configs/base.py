@@ -1,0 +1,227 @@
+"""Model configuration system.
+
+One ``ModelConfig`` dataclass covers every assigned architecture family
+(dense / moe / encdec / rwkv / hybrid / vlm).  Each architecture file in
+this package instantiates the exact published config and provides a
+``reduced()`` smoke-test variant that preserves the family's structural
+features (attention pattern, MoE routing, hybrid interleaving, ...) at a
+fraction of the size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | encdec | rwkv | hybrid | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+
+    # --- attention pattern (dense/vlm/gemma families) ---
+    # string of 'L' (local sliding-window) / 'G' (global) per layer; None = all global
+    attn_pattern: Optional[str] = None
+    window_size: int = 4096
+    attn_softcap: float = 0.0        # gemma2-style tanh softcap on attn logits
+    final_softcap: float = 0.0       # softcap on output logits
+    rope_theta: float = 10000.0
+    rope_theta_local: float = 0.0    # 0 -> use rope_theta for local layers too
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0        # qwen2-moe: always-active shared experts
+    moe_d_ff: int = 0                # per-expert hidden size
+    dense_residual: bool = False     # arctic: dense FFN in parallel with MoE
+    capacity_factor: float = 1.25
+
+    # --- enc-dec (whisper) ---
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    enc_ctx: int = 1500              # encoder output length for cross-attn stubs
+
+    # --- rwkv6 ---
+    rwkv_head_dim: int = 64
+
+    # --- mamba2 / zamba2 hybrid ---
+    d_state: int = 0                 # SSM state size N
+    ssd_head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    shared_attn_every: int = 0       # zamba2: shared attn block every K mamba layers
+
+    # --- vlm ---
+    n_img_tokens: int = 0            # stub patch-embedding prefix length
+
+    # --- common ---
+    mlp_gated: bool = True           # gated silu (llama) vs plain 2-mat MLP
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    rms_offset: bool = False         # gemma: scale by (1 + w)
+    post_norms: bool = False         # gemma2/3: sandwich (post-sublayer) norms
+    emb_scale: bool = False          # gemma: embeddings * sqrt(d_model)
+    tie_embeddings: bool = False
+    max_seq: int = 131072
+    param_dtype: str = "bfloat16"
+    # which shapes this arch supports (long_500k only for sub-quadratic archs)
+    supports_long_context: bool = False
+    # unroll lax.scan over layers: XLA cost_analysis counts a scan body
+    # once (trip count unknown), so the dry-run unrolls for faithful
+    # roofline FLOPs/bytes; runtime configs keep the compact scan
+    scan_unroll: bool = False
+    notes: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def pattern(self) -> str:
+        if self.attn_pattern is not None:
+            assert len(self.attn_pattern) == self.n_layers, self.name
+            return self.attn_pattern
+        return "G" * self.n_layers
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---------------- parameter counting ----------------
+    def param_count(self) -> int:
+        """Analytic parameter count (matches init_params up to norm vectors)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        mlp_dense = (3 if self.mlp_gated else 2) * d * self.d_ff
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        if self.family in ("dense", "vlm"):
+            per_layer = attn + mlp_dense
+            return self.n_layers * per_layer + emb
+        if self.family == "moe":
+            moe = self.n_experts * 3 * d * self.moe_d_ff
+            shared = self.n_shared_experts * 3 * d * self.moe_d_ff
+            dense_res = mlp_dense if self.dense_residual else 0
+            router = d * self.n_experts
+            per_layer = attn + moe + shared + dense_res + router
+            return self.n_layers * per_layer + emb
+        if self.family == "encdec":
+            enc = self.n_enc_layers * (attn + mlp_dense)
+            dec = self.n_dec_layers * (2 * attn + mlp_dense)
+            return enc + dec + emb
+        if self.family == "rwkv":
+            # timemix: r,k,v,g,o (d*d each) + decay/lora small; channelmix ~ 2*d*dff
+            per_layer = 5 * d * d + 2 * d * self.d_ff + 6 * d * 96
+            return self.n_layers * per_layer + emb
+        if self.family == "hybrid":
+            di = self.expand * d
+            mamba = d * 2 * di + d * (2 * self.d_state + di // self.ssd_head_dim) \
+                + di * d + self.conv_kernel * (di + 2 * self.d_state)
+            n_mamba, n_shared = self.hybrid_layout()
+            shared = attn + mlp_dense
+            return n_mamba * mamba + shared + emb
+        raise ValueError(self.family)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed top-k + shared)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        all_experts = self.n_layers * self.n_experts * 3 * d * self.moe_d_ff
+        active_experts = self.n_layers * self.top_k * 3 * d * self.moe_d_ff
+        return full - all_experts + active_experts
+
+    def hybrid_layout(self) -> Tuple[int, int]:
+        """(n_mamba_layers, n_shared_attn_sites) for zamba2-style hybrids."""
+        assert self.family == "hybrid"
+        k = self.shared_attn_every
+        # n_layers counts every block application (mamba blocks + shared-attn sites)
+        n_sites = self.n_layers // (k + 1)
+        n_mamba = self.n_layers - n_sites
+        return n_mamba, n_sites
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned): every arch is paired with these four shape cells.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """Whether (arch, shape) is a runnable cell; reason if skipped."""
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return False, "full-attention arch: 500k decode KV unjustifiable (see DESIGN.md §5)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    No device allocation.  ``train``: token/label batches.  ``prefill``:
+    token batch.  ``decode``: one-token batch + cache state shapes are
+    produced by the step builders in repro.models.api (the cache is an
+    explicit argument there so its specs live beside the step function).
+    """
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "encdec":
+        if spec.kind == "train":
+            return {
+                "enc_inputs": sds((B, S, cfg.d_model), cfg.dtype),  # stub frame embs
+                "tokens": sds((B, S), i32),
+                "labels": sds((B, S), i32),
+            }
+        if spec.kind == "prefill":
+            return {
+                "enc_inputs": sds((B, S, cfg.d_model), cfg.dtype),
+                "tokens": sds((B, 1), i32),
+            }
+        # decode: one decoder token; cross-attn context of enc_ctx frames
+        return {"tokens": sds((B, 1), i32)}
+    if cfg.family == "vlm":
+        n_img = cfg.n_img_tokens
+        if spec.kind == "train":
+            return {
+                "img_embs": sds((B, n_img, cfg.d_model), cfg.dtype),  # stub patches
+                "tokens": sds((B, S - n_img), i32),
+                "labels": sds((B, S - n_img), i32),
+            }
+        if spec.kind == "prefill":
+            return {
+                "img_embs": sds((B, n_img, cfg.d_model), cfg.dtype),
+                "tokens": sds((B, S - n_img), i32),
+            }
+        return {"tokens": sds((B, 1), i32)}
+    # LM families (dense/moe/rwkv/hybrid)
+    if spec.kind == "train":
+        return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+    if spec.kind == "prefill":
+        return {"tokens": sds((B, S), i32)}
+    return {"tokens": sds((B, 1), i32)}

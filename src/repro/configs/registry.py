@@ -1,0 +1,52 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import (arctic_480b, gemma2_2b, gemma3_1b, granite_20b,
+                           mistral_nemo_12b, paligemma_3b, qwen2_moe_a2_7b,
+                           rwkv6_3b, whisper_base, zamba2_7b)
+from repro.configs.base import SHAPES, ModelConfig, input_specs, shape_supported
+
+_MODULES = {
+    "mistral-nemo-12b": mistral_nemo_12b,
+    "granite-20b": granite_20b,
+    "gemma2-2b": gemma2_2b,
+    "gemma3-1b": gemma3_1b,
+    "arctic-480b": arctic_480b,
+    "qwen2-moe-a2.7b": qwen2_moe_a2_7b,
+    "whisper-base": whisper_base,
+    "paligemma-3b": paligemma_3b,
+    "rwkv6-3b": rwkv6_3b,
+    "zamba2-7b": zamba2_7b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(_MODULES)}")
+    return _MODULES[arch].CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _MODULES[arch].reduced()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {k: m.CONFIG for k, m in _MODULES.items()}
+
+
+def all_cells():
+    """Every (arch, shape) cell with its supported/skip status."""
+    out = []
+    for arch, mod in _MODULES.items():
+        for shape in SHAPES:
+            ok, reason = shape_supported(mod.CONFIG, shape)
+            out.append((arch, shape, ok, reason))
+    return out
+
+
+__all__ = ["ARCH_IDS", "get_config", "get_reduced", "all_configs",
+           "all_cells", "input_specs", "SHAPES"]

@@ -1,0 +1,5 @@
+"""IOLM-DB core: instance-optimized model generation (the paper's
+contribution).  calibrate -> {prune, sparsify, quantize} -> policy."""
+from repro.core.compressed import (BlockSparseTensor, QEmbed, QTensor,
+                                   matmul, param_bytes, use_kernels)
+from repro.core.pipeline import InstanceOptimizer, Recipe

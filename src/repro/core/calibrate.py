@@ -1,0 +1,328 @@
+"""Calibration: per-weight activation statistics from a data sample.
+
+The paper (§3.2) fine-tunes quantization parameters and pruning
+thresholds on *calibration data* — "small, unlabeled samples representing
+the query's input domain".  This module runs the model **eagerly** (no
+jit) layer-by-layer on such a sample and collects, per weight matrix:
+
+  - ``H``       Gram matrix  X^T X  of the layer's inputs  (GPTQ [21] /
+                SparseGPT [11] need the full input Hessian proxy)
+  - ``sqnorm``  per-input-channel  sum x^2   (Wanda pruning metric)
+  - ``amax``    per-input-channel  max |x|   (SmoothQuant [22] scales)
+  - ``count``   number of observed rows
+  - ``route_count`` (MoE routers) per-expert dispatch counts — the
+                signal for *instance-optimized expert pruning*
+
+plus per-block input/output cosine similarity (layer-drop scores: a block
+whose output ≈ input is structurally redundant **for this query's data**,
+which is exactly the instance-optimization the paper argues for).
+
+Weights are keyed by their path in the param pytree (e.g.
+``blocks.0.3.attn.wq``); the interception happens inside
+``repro.core.compressed.matmul`` via ``set_record_hook`` so NO model code
+needs to know about calibration.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressed
+
+
+@dataclasses.dataclass
+class WeightStats:
+    shape: Tuple[int, ...]
+    count: int = 0
+    H: Optional[np.ndarray] = None        # [d_in, d_in] (or [E, d_in, d_in])
+    sqnorm: Optional[np.ndarray] = None   # [d_in] (or [E, d_in])
+    amax: Optional[np.ndarray] = None     # [d_in] (or [E, d_in])
+    route_count: Optional[np.ndarray] = None  # routers only: [E]
+    route_prob: Optional[np.ndarray] = None   # routers only: [E]
+
+    def merge_norm(self):
+        """Per-channel RMS norm of inputs (Wanda metric)."""
+        return np.sqrt(self.sqnorm / max(self.count, 1))
+
+
+@dataclasses.dataclass
+class CalibStats:
+    weights: Dict[str, WeightStats]
+    block_sim: Dict[str, float]      # path -> cos(x_in, x_out)
+    n_tokens: int = 0
+
+    def get(self, path: str) -> Optional[WeightStats]:
+        return self.weights.get(path)
+
+
+class Recorder:
+    """Accumulates statistics for weights registered under a path scope."""
+
+    def __init__(self, hessian: bool = True):
+        self.hessian = hessian
+        self.stats: Dict[str, WeightStats] = {}
+        self.block_sim: Dict[str, float] = {}
+        self._id2path: Dict[int, str] = {}
+        self.n_tokens = 0
+
+    # ---- scope management ----
+    def register(self, prefix: str, tree) -> None:
+        """Map every array leaf of ``tree`` to ``prefix.<path>``."""
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        for path, leaf in flat:
+            name = prefix + "." + _path_str(path) if prefix else _path_str(path)
+            self._id2path[id(leaf)] = name
+
+    @contextlib.contextmanager
+    def active(self):
+        compressed.set_record_hook(self._on_matmul)
+        compressed.set_route_hook(self._on_route)
+        try:
+            yield self
+        finally:
+            compressed.set_record_hook(None)
+            compressed.set_route_hook(None)
+
+    # ---- hooks ----
+    def _on_matmul(self, w, x, valid=None) -> None:
+        path = self._id2path.get(id(w))
+        if path is None or getattr(w, "ndim", 0) < 2:
+            return
+        st = self.stats.get(path)
+        if st is None:
+            st = WeightStats(shape=tuple(w.shape))
+            self.stats[path] = st
+        if w.ndim == 3 and valid is not None:
+            # stacked expert weights: x is [E, C, d_in], valid [E] counts
+            xe = np.asarray(x, np.float32)                  # [E, C, d]
+            E, C, d = xe.shape
+            mask = (np.arange(C)[None, :]
+                    < np.asarray(valid)[:, None]).astype(np.float32)
+            xm = xe * mask[..., None]
+            if st.sqnorm is None:
+                st.sqnorm = np.zeros((E, d), np.float32)
+                st.amax = np.zeros((E, d), np.float32)
+                if self.hessian:
+                    st.H = np.zeros((E, d, d), np.float64)
+            st.sqnorm += (xm ** 2).sum(1)
+            st.amax = np.maximum(st.amax, np.abs(xm).max(1))
+            if self.hessian:
+                st.H += np.einsum("eci,ecj->eij", xm, xm, optimize=True)
+            st.count += int(np.asarray(valid).sum())
+            return
+        xf = np.asarray(x, np.float32).reshape(-1, x.shape[-1])  # [N, d_in]
+        d = xf.shape[1]
+        if st.sqnorm is None:
+            st.sqnorm = np.zeros((d,), np.float32)
+            st.amax = np.zeros((d,), np.float32)
+            if self.hessian:
+                st.H = np.zeros((d, d), np.float64)
+        st.sqnorm += (xf ** 2).sum(0)
+        st.amax = np.maximum(st.amax, np.abs(xf).max(0))
+        if self.hessian:
+            st.H += xf.T.astype(np.float64) @ xf.astype(np.float64)
+        st.count += xf.shape[0]
+
+    def _on_route(self, router_w, counts, probs_mean) -> None:
+        path = self._id2path.get(id(router_w))
+        if path is None:
+            return
+        st = self.stats.get(path)
+        if st is None:
+            st = WeightStats(shape=tuple(router_w.shape))
+            self.stats[path] = st
+        c = np.asarray(counts, np.float64)
+        p = np.asarray(probs_mean, np.float64)
+        st.route_count = c if st.route_count is None else st.route_count + c
+        st.route_prob = p if st.route_prob is None else st.route_prob + p
+
+    def record_block(self, path: str, x_in, x_out) -> None:
+        a = np.asarray(x_in, np.float32).reshape(-1)
+        b = np.asarray(x_out, np.float32).reshape(-1)
+        cos = float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-9))
+        # average if a block is visited multiple times (shared blocks)
+        if path in self.block_sim:
+            self.block_sim[path] = 0.5 * (self.block_sim[path] + cos)
+        else:
+            self.block_sim[path] = cos
+
+    def finish(self) -> CalibStats:
+        return CalibStats(weights=self.stats, block_sim=self.block_sim,
+                          n_tokens=self.n_tokens)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def slice_layer(tree, i: int):
+    """Concrete per-layer slice of stacked params (holds references so the
+    recorder's id-keying stays valid for the duration of the block run)."""
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+# ---------------------------------------------------------------------------
+# family drivers — mirror the forward() execution order exactly
+# ---------------------------------------------------------------------------
+
+def calibrate(params, cfg, batch: Dict[str, Any], *, hessian: bool = True,
+              include_head: bool = True) -> CalibStats:
+    """Run the model eagerly on ``batch`` and gather calibration stats."""
+    rec = Recorder(hessian=hessian)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        _calib_transformer(rec, params, cfg, batch, include_head)
+    elif fam == "rwkv":
+        _calib_rwkv(rec, params, cfg, batch, include_head)
+    elif fam == "hybrid":
+        _calib_hybrid(rec, params, cfg, batch, include_head)
+    elif fam == "encdec":
+        _calib_encdec(rec, params, cfg, batch, include_head)
+    else:
+        raise ValueError(fam)
+    return rec.finish()
+
+
+def _calib_transformer(rec, params, cfg, batch, include_head):
+    from repro.models import layers as L
+    from repro.models import transformer as TF
+    tokens = batch["tokens"]
+    x = L.embed(params, cfg, tokens)
+    if cfg.family == "vlm" and batch.get("img_embs") is not None:
+        x = jnp.concatenate([batch["img_embs"].astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    rec.n_tokens = B * S
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    unit, R, tail = TF.pattern_unit(cfg)
+    with rec.active():
+        for r in range(R):
+            for u, kind in enumerate(unit):
+                bp = slice_layer(params["blocks"][u], r)
+                path = f"blocks.{u}.{r}"
+                rec.register(path, bp)
+                x2, _ = TF.block_apply(bp, x, cfg, kind=kind,
+                                       positions=positions, train=False)
+                rec.record_block(path, x, x2)
+                x = x2
+        for i, bp in enumerate(params["tail"]):
+            path = f"tail.{i}"
+            rec.register(path, bp)
+            x2, _ = TF.block_apply(bp, x, cfg, kind=unit[i % len(unit)],
+                                   positions=positions, train=False)
+            rec.record_block(path, x, x2)
+            x = x2
+        if include_head and not cfg.tie_embeddings:
+            x = L.norm(x, params["ln_f"], cfg)
+            rec.register("", {"unembed": params["unembed"]})
+            L.matmul(x, params["unembed"])
+
+
+def _calib_rwkv(rec, params, cfg, batch, include_head):
+    from repro.models import layers as L
+    from repro.models import rwkv as RW
+    x = L.embed(params, cfg, batch["tokens"])
+    B, S, _ = x.shape
+    rec.n_tokens = B * S
+    n = params["blocks"][0]["ln1"]["w"].shape[0]
+    with rec.active():
+        for r in range(n):
+            bp = slice_layer(params["blocks"][0], r)
+            path = f"blocks.0.{r}"
+            rec.register(path, bp)
+            x2, _ = RW.block_apply(bp, x, cfg)
+            rec.record_block(path, x, x2)
+            x = x2
+        if include_head and not cfg.tie_embeddings:
+            x = L.norm(x, params["ln_f"], cfg)
+            rec.register("", {"unembed": params["unembed"]})
+            L.matmul(x, params["unembed"])
+
+
+def _calib_hybrid(rec, params, cfg, batch, include_head):
+    from repro.models import hybrid as HY
+    from repro.models import layers as L
+    from repro.models import mamba as M
+    from repro.models import transformer as TF
+    x = L.embed(params, cfg, batch["tokens"])
+    B, S, _ = x.shape
+    rec.n_tokens = B * S
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    G, K, tail, _ = HY.layout(cfg)
+    shared = params["shared"]
+    rec.register("shared", shared)
+    with rec.active():
+        for g in range(G):
+            for k in range(K):
+                bp = jax.tree.map(lambda a: a[g][k], params["mamba_groups"])
+                path = f"mamba_groups.{g}.{k}"
+                rec.register(path, bp)
+                x2, _ = M.block_apply(bp, x, cfg)
+                rec.record_block(path, x, x2)
+                x = x2
+            x2, _ = TF.block_apply(shared, x, cfg, kind="G",
+                                   positions=positions, train=False)
+            rec.record_block("shared", x, x2)
+            x = x2
+        for i in range(tail):
+            bp = slice_layer(params["mamba_tail"], i)
+            path = f"mamba_tail.{i}"
+            rec.register(path, bp)
+            x2, _ = M.block_apply(bp, x, cfg)
+            rec.record_block(path, x, x2)
+            x = x2
+        if include_head and not cfg.tie_embeddings:
+            x = L.norm(x, params["ln_f"], cfg)
+            rec.register("", {"unembed": params["unembed"]})
+            L.matmul(x, params["unembed"])
+
+
+def _calib_encdec(rec, params, cfg, batch, include_head):
+    from repro.models import encdec as ED
+    from repro.models import layers as L
+    from repro.models.layers import norm
+    enc_inputs, tokens = batch["enc_inputs"], batch["tokens"]
+    B = tokens.shape[0]
+    rec.n_tokens = tokens.size
+    with rec.active():
+        x = enc_inputs + params["pos_enc"][None, :enc_inputs.shape[1]]
+        for i, p in enumerate(params["enc_blocks"]):
+            path = f"enc_blocks.{i}"
+            rec.register(path, p)
+            a, _, _ = ED._mha(p["attn"], norm(x, p["ln1"], cfg), cfg,
+                              causal=False)
+            x2 = x + a
+            x2 = x2 + ED._gelu_mlp(p["mlp"], norm(x2, p["ln2"], cfg))
+            rec.record_block(path, x, x2)
+            x = x2
+        enc_out = norm(x, params["ln_enc"], cfg)
+        x = L.embed(params, cfg, tokens)
+        x = x + params["pos_dec"][None, :tokens.shape[1]]
+        for i, p in enumerate(params["dec_blocks"]):
+            path = f"dec_blocks.{i}"
+            rec.register(path, p)
+            a, _, _ = ED._mha(p["attn"], norm(x, p["ln1"], cfg), cfg,
+                              causal=True)
+            x2 = x + a
+            a, _, _ = ED._mha(p["xattn"], norm(x2, p["lnx"], cfg), cfg,
+                              kv_x=enc_out, causal=False)
+            x2 = x2 + a
+            x2 = x2 + ED._gelu_mlp(p["mlp"], norm(x2, p["ln2"], cfg))
+            rec.record_block(path, x, x2)
+            x = x2
+        if include_head and not cfg.tie_embeddings:
+            x = norm(x, params["ln_f"], cfg)
+            rec.register("", {"unembed": params["unembed"]})
+            L.matmul(x, params["unembed"])

@@ -1,0 +1,542 @@
+"""Structural pruning: KV-head groups, FFN channels, whole layers, experts.
+
+LLM-Pruner-style [20] removal of entire components, driven by the
+calibration statistics (so the *same data sample* that tunes quantization
+also decides what structure this query does not need).
+
+TPU-native design decision (DESIGN.md §3): pruned counts are **uniform
+across layers** (every layer keeps the same number of KV groups / FFN
+channels / experts, each layer choosing its own least-important members).
+XLA requires static uniform shapes inside ``lax.scan`` stacks, and
+uniform budgets keep one compiled kernel for all layers; the per-layer
+*choice* is where the instance-optimization lives.  Layer dropping
+operates at pattern-unit granularity for scanned stacks (per-layer for
+unrolled stacks like whisper's).
+
+Every transform returns ``(new_params, new_cfg, new_stats)`` — the stats
+are re-sliced/re-keyed so downstream quantization/sparsification still
+has correct Hessians for the reduced shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibrate import CalibStats, WeightStats
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _take_stacked(stacked, idx: np.ndarray, axis: int):
+    """stacked [R, ...]; idx [R, k] per-layer indices along ``axis``."""
+    idxj = jnp.asarray(idx)
+    return jax.vmap(lambda w, i: jnp.take(w, i, axis=axis))(stacked, idxj)
+
+
+def _channel_importance(st: Optional[WeightStats], w_np: np.ndarray) -> np.ndarray:
+    """Per-input-channel importance of a [d_in, d_out] weight: Wanda-style
+    ||x||^2 * mean w^2 per row, falling back to weight norms alone."""
+    row = (w_np.astype(np.float32) ** 2).mean(1)
+    if st is not None and st.sqnorm is not None:
+        return st.sqnorm / max(st.count, 1) * row
+    return row
+
+
+def _slice_stats(st: Optional[WeightStats], idx: np.ndarray) -> Optional[WeightStats]:
+    """Restrict input-channel stats to ``idx`` (for downstream quant)."""
+    if st is None:
+        return None
+    return WeightStats(
+        shape=(len(idx),) + tuple(st.shape[1:]),
+        count=st.count,
+        H=None if st.H is None else st.H[np.ix_(idx, idx)],
+        sqnorm=None if st.sqnorm is None else st.sqnorm[idx],
+        amax=None if st.amax is None else st.amax[idx],
+    )
+
+
+def _np(x) -> np.ndarray:
+    return np.asarray(jax.device_get(x), np.float32)
+
+
+# ---------------------------------------------------------------------------
+# KV-group (GQA head) pruning
+# ---------------------------------------------------------------------------
+
+def prune_kv_groups(params, cfg, stats: CalibStats, keep: int):
+    """Keep the ``keep`` most important KV groups in every attention block.
+
+    Inapplicable families (rwkv) are returned unchanged — recorded in
+    DESIGN.md §Arch-applicability.
+    """
+    if cfg.family == "rwkv":
+        return params, cfg, stats
+    K, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    assert 1 <= keep <= K, (keep, K)
+    if keep == K:
+        return params, cfg, stats
+    params = jax.tree.map(lambda a: a, params)  # shallow copy
+    new_stats = dict(stats.weights)
+
+    def group_imp(wo_st: Optional[WeightStats], wo_np: np.ndarray) -> np.ndarray:
+        imp = _channel_importance(wo_st, wo_np)          # [H*hd]
+        return imp.reshape(K, G * hd).sum(1)             # [K]
+
+    def prune_one(attn, paths: List[str]) -> Dict:
+        """attn leaves stacked [R, ...]; paths[r] = stats key prefix."""
+        R = attn["wo"].shape[0] if attn["wq"].ndim == 3 else 1
+        stacked = attn["wq"].ndim == 3
+        idx = np.zeros((R, keep), np.int64)
+        for r in range(R):
+            wo_np = _np(attn["wo"][r] if stacked else attn["wo"])
+            st = stats.get(paths[r] + ".wo")
+            order = np.argsort(-group_imp(st, wo_np), kind="stable")[:keep]
+            idx[r] = np.sort(order)
+        if stacked:
+            d = attn["wq"].shape[1]
+            wq = _take_stacked(attn["wq"].reshape(R, d, K, G * hd), idx, 1)
+            wq = wq.reshape(R, d, keep * G * hd)
+            wk = _take_stacked(attn["wk"].reshape(R, d, K, hd), idx, 1)
+            wk = wk.reshape(R, d, keep * hd)
+            wv = _take_stacked(attn["wv"].reshape(R, d, K, hd), idx, 1)
+            wv = wv.reshape(R, d, keep * hd)
+            wo = _take_stacked(attn["wo"].reshape(R, K, G * hd, d), idx, 0)
+            wo = wo.reshape(R, keep * G * hd, d)
+        else:
+            d = attn["wq"].shape[0]
+            i0 = jnp.asarray(idx[0])
+            wq = jnp.take(attn["wq"].reshape(d, K, G * hd), i0, 1).reshape(d, -1)
+            wk = jnp.take(attn["wk"].reshape(d, K, hd), i0, 1).reshape(d, -1)
+            wv = jnp.take(attn["wv"].reshape(d, K, hd), i0, 1).reshape(d, -1)
+            wo = jnp.take(attn["wo"].reshape(K, G * hd, d), i0, 0).reshape(-1, d)
+        # stats: wo input channels restricted to kept groups
+        for r in range(R):
+            ch = np.concatenate([idx[r, j] * G * hd + np.arange(G * hd)
+                                 for j in range(keep)])
+            key = paths[r] + ".wo"
+            if key in new_stats:
+                new_stats[key] = _slice_stats(new_stats[key], ch)
+        return {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        from repro.models.transformer import pattern_unit
+        unit, R, tail = pattern_unit(cfg)
+        for u in range(len(unit)):
+            paths = [f"blocks.{u}.{r}.attn" for r in range(R)]
+            params["blocks"][u] = dict(params["blocks"][u])
+            params["blocks"][u]["attn"] = prune_one(
+                params["blocks"][u]["attn"], paths)
+        for i in range(tail):
+            params["tail"][i] = dict(params["tail"][i])
+            params["tail"][i]["attn"] = prune_one(
+                params["tail"][i]["attn"], [f"tail.{i}.attn"])
+    elif fam == "hybrid":
+        params["shared"] = dict(params["shared"])
+        params["shared"]["attn"] = prune_one(params["shared"]["attn"],
+                                             ["shared.attn"])
+    elif fam == "encdec":
+        for lst, nm in (("enc_blocks", "attn"), ("dec_blocks", "attn"),
+                        ("dec_blocks", "xattn")):
+            for i in range(len(params[lst])):
+                params[lst][i] = dict(params[lst][i])
+                params[lst][i][nm] = prune_one(params[lst][i][nm],
+                                               [f"{lst}.{i}.{nm}"])
+    # pin head_dim: n_heads changes would silently alter d_model//n_heads
+    new_cfg = cfg.replace(n_kv_heads=keep, n_heads=keep * G,
+                          head_dim=cfg.resolved_head_dim)
+    return params, new_cfg, CalibStats(new_stats, stats.block_sim,
+                                       stats.n_tokens)
+
+
+# ---------------------------------------------------------------------------
+# FFN channel pruning
+# ---------------------------------------------------------------------------
+
+def prune_ffn(params, cfg, stats: CalibStats, keep_frac: float):
+    """Keep the top ``keep_frac`` FFN hidden channels (per layer choice).
+
+    Covers dense MLPs (wi/wg/wo), MoE expert FFNs (per-expert channels),
+    qwen's shared MLP, arctic's dense-residual MLP, rwkv channel-mix, and
+    whisper GELU MLPs.  Mamba inner channels are left alone (the SSD
+    state/headdim coupling makes channel removal a different operation —
+    see DESIGN.md §Arch-applicability).
+    """
+    if keep_frac >= 1.0:
+        return params, cfg, stats
+    params = jax.tree.map(lambda a: a, params)
+    new_stats = dict(stats.weights)
+
+    def prune_mlp(mlp: Dict, paths: List[str], gated: bool = True) -> Dict:
+        stacked = mlp["wo"].ndim == 3
+        R = mlp["wo"].shape[0] if stacked else 1
+        ff = mlp["wo"].shape[-2]
+        keep_ff = max(8, int(round(keep_frac * ff)) // 8 * 8)
+        idx = np.zeros((R, keep_ff), np.int64)
+        for r in range(R):
+            wo_np = _np(mlp["wo"][r] if stacked else mlp["wo"])
+            st = stats.get(paths[r] + ".wo")
+            imp = _channel_importance(st, wo_np)
+            idx[r] = np.sort(np.argsort(-imp, kind="stable")[:keep_ff])
+        out = dict(mlp)
+        if stacked:
+            out["wo"] = _take_stacked(mlp["wo"], idx, 0)
+            out["wi"] = _take_stacked(mlp["wi"], idx, 1)
+            if gated and "wg" in mlp:
+                out["wg"] = _take_stacked(mlp["wg"], idx, 1)
+        else:
+            i0 = jnp.asarray(idx[0])
+            out["wo"] = jnp.take(mlp["wo"], i0, 0)
+            out["wi"] = jnp.take(mlp["wi"], i0, 1)
+            if gated and "wg" in mlp:
+                out["wg"] = jnp.take(mlp["wg"], i0, 1)
+        for r in range(R):
+            key = paths[r] + ".wo"
+            if key in new_stats:
+                new_stats[key] = _slice_stats(new_stats[key], idx[r])
+        return out
+
+    def prune_moe(moe: Dict, paths: List[str]) -> Dict:
+        """Per-expert channel pruning: uniform keep count, per-(layer,
+        expert) choice.  Expert weights [R?, E, d, ffe] / wo [R?, E, ffe, d]."""
+        stacked = moe["wo"].ndim == 4
+        R = moe["wo"].shape[0] if stacked else 1
+        E, ffe = moe["wo"].shape[-3], moe["wo"].shape[-2]
+        keep_ff = max(8, int(round(keep_frac * ffe)) // 8 * 8)
+        idx = np.zeros((R, E, keep_ff), np.int64)
+        for r in range(R):
+            wo_np = _np(moe["wo"][r] if stacked else moe["wo"])  # [E, ffe, d]
+            st = stats.get(paths[r] + ".wo")
+            for e in range(E):
+                row = (wo_np[e] ** 2).mean(1)
+                if st is not None and st.sqnorm is not None:
+                    imp = st.sqnorm[e] / max(st.count, 1) * row
+                else:
+                    imp = row
+                idx[r, e] = np.sort(np.argsort(-imp, kind="stable")[:keep_ff])
+        out = dict(moe)
+
+        def tk(w, axis):
+            idxj = jnp.asarray(idx)
+            if stacked:
+                return jax.vmap(jax.vmap(
+                    lambda we, i: jnp.take(we, i, axis=axis - 1)))(
+                        w, idxj)
+            return jax.vmap(lambda we, i: jnp.take(we, i, axis=axis - 1))(
+                w, idxj[0])
+
+        out["wo"] = tk(moe["wo"], 1)      # [.., E, keep_ff, d]
+        out["wi"] = tk(moe["wi"], 2)      # [.., E, d, keep_ff]
+        out["wg"] = tk(moe["wg"], 2)
+        for r in range(R):
+            key = paths[r] + ".wo"
+            st = new_stats.get(key)
+            if st is not None and st.sqnorm is not None:
+                new_stats[key] = WeightStats(
+                    shape=(E, keep_ff, moe["wo"].shape[-1]),
+                    count=st.count,
+                    H=None if st.H is None else np.stack(
+                        [st.H[e][np.ix_(idx[r, e], idx[r, e])]
+                         for e in range(E)]),
+                    sqnorm=np.stack([st.sqnorm[e][idx[r, e]]
+                                     for e in range(E)]),
+                    amax=np.stack([st.amax[e][idx[r, e]] for e in range(E)]),
+                )
+        return out
+
+    fam = cfg.family
+    new_ff, new_moe_ff = cfg.d_ff, cfg.moe_d_ff
+    if fam in ("dense", "moe", "vlm"):
+        from repro.models.transformer import pattern_unit
+        unit, R, tail = pattern_unit(cfg)
+        for u in range(len(unit)):
+            blk = dict(params["blocks"][u])
+            if "mlp" in blk:
+                blk["mlp"] = prune_mlp(blk["mlp"],
+                                       [f"blocks.{u}.{r}.mlp" for r in range(R)])
+                new_ff = blk["mlp"]["wo"].shape[-2]
+            if "moe" in blk:
+                blk["moe"] = prune_moe(blk["moe"],
+                                       [f"blocks.{u}.{r}.moe" for r in range(R)])
+                new_moe_ff = blk["moe"]["wo"].shape[-2]
+            if "shared_mlp" in blk:
+                blk["shared_mlp"] = prune_mlp(
+                    blk["shared_mlp"],
+                    [f"blocks.{u}.{r}.shared_mlp" for r in range(R)])
+            if "dense_mlp" in blk:
+                blk["dense_mlp"] = prune_mlp(
+                    blk["dense_mlp"],
+                    [f"blocks.{u}.{r}.dense_mlp" for r in range(R)])
+                new_ff = blk["dense_mlp"]["wo"].shape[-2]
+            params["blocks"][u] = blk
+        for i in range(tail):
+            blk = dict(params["tail"][i])
+            if "mlp" in blk:
+                blk["mlp"] = prune_mlp(blk["mlp"], [f"tail.{i}.mlp"])
+            if "moe" in blk:
+                blk["moe"] = prune_moe(blk["moe"], [f"tail.{i}.moe"])
+            if "shared_mlp" in blk:
+                blk["shared_mlp"] = prune_mlp(blk["shared_mlp"],
+                                              [f"tail.{i}.shared_mlp"])
+            if "dense_mlp" in blk:
+                blk["dense_mlp"] = prune_mlp(blk["dense_mlp"],
+                                             [f"tail.{i}.dense_mlp"])
+            params["tail"][i] = blk
+    elif fam == "rwkv":
+        stackp = params["blocks"][0]
+        R = stackp["ln1"]["w"].shape[0]
+        cm = dict(stackp["cm"])
+        ff = cm["wv"].shape[-2]
+        keep_ff = max(8, int(round(keep_frac * ff)) // 8 * 8)
+        idx = np.zeros((R, keep_ff), np.int64)
+        for r in range(R):
+            st = stats.get(f"blocks.0.{r}.cm.wv")
+            imp = _channel_importance(st, _np(cm["wv"][r]))
+            idx[r] = np.sort(np.argsort(-imp, kind="stable")[:keep_ff])
+        cm["wv"] = _take_stacked(cm["wv"], idx, 0)
+        cm["wk"] = _take_stacked(cm["wk"], idx, 1)
+        for r in range(R):
+            key = f"blocks.0.{r}.cm.wv"
+            if key in new_stats:
+                new_stats[key] = _slice_stats(new_stats[key], idx[r])
+        stackp = dict(stackp)
+        stackp["cm"] = cm
+        params["blocks"] = [stackp]
+        new_ff = keep_ff
+    elif fam == "hybrid":
+        params["shared"] = dict(params["shared"])
+        params["shared"]["mlp"] = prune_mlp(params["shared"]["mlp"],
+                                            ["shared.mlp"])
+        new_ff = params["shared"]["mlp"]["wo"].shape[-2]
+    elif fam == "encdec":
+        for lst in ("enc_blocks", "dec_blocks"):
+            for i in range(len(params[lst])):
+                params[lst][i] = dict(params[lst][i])
+                params[lst][i]["mlp"] = prune_mlp(
+                    params[lst][i]["mlp"], [f"{lst}.{i}.mlp"], gated=False)
+                new_ff = params[lst][i]["mlp"]["wo"].shape[-2]
+    new_cfg = cfg.replace(d_ff=new_ff, moe_d_ff=new_moe_ff)
+    return params, new_cfg, CalibStats(new_stats, stats.block_sim,
+                                       stats.n_tokens)
+
+
+# ---------------------------------------------------------------------------
+# layer dropping
+# ---------------------------------------------------------------------------
+
+def drop_layers(params, cfg, stats: CalibStats, n_drop_units: int):
+    """Drop the ``n_drop_units`` most redundant scan repeats (pattern units
+    — single layers for uniform stacks; per-layer for unrolled stacks).
+
+    Redundancy score = 1 - cos(block input, block output) averaged over
+    the unit, from calibration.  Order of the surviving layers is kept.
+    """
+    if n_drop_units <= 0:
+        return params, cfg, stats
+    params = jax.tree.map(lambda a: a, params)
+    new_stats = dict(stats.weights)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        from repro.models.transformer import pattern_unit
+        unit, R, tail = pattern_unit(cfg)
+        keep_n = max(1, R - n_drop_units)
+        score = np.zeros(R)
+        for r in range(R):
+            sims = [stats.block_sim.get(f"blocks.{u}.{r}", 0.0)
+                    for u in range(len(unit))]
+            score[r] = 1.0 - float(np.mean(sims))
+        kept = np.sort(np.argsort(-score, kind="stable")[:keep_n])
+        for u in range(len(unit)):
+            params["blocks"][u] = jax.tree.map(
+                lambda a: jnp.take(a, jnp.asarray(kept), axis=0),
+                params["blocks"][u])
+            # re-key stats blocks.u.{old} -> blocks.u.{new}
+            moved = {}
+            for new_i, old_i in enumerate(kept.tolist()):
+                pre_old, pre_new = f"blocks.{u}.{old_i}.", f"blocks.{u}.{new_i}."
+                for k in list(new_stats):
+                    if k.startswith(pre_old):
+                        moved[pre_new + k[len(pre_old):]] = new_stats.pop(k)
+            # purge dropped
+            for k in list(new_stats):
+                if k.startswith(f"blocks.{u}.") and k not in moved:
+                    drop_r = int(k.split(".")[2])
+                    if drop_r >= keep_n and k not in moved:
+                        new_stats.pop(k)
+            new_stats.update(moved)
+        new_layers = len(unit) * keep_n + tail
+        pat = cfg.pattern()
+        new_pat = unit * keep_n + pat[len(unit) * R:]
+        new_cfg = cfg.replace(n_layers=new_layers,
+                              attn_pattern=new_pat
+                              if cfg.attn_pattern is not None else None)
+    elif fam == "rwkv":
+        R = cfg.n_layers
+        keep_n = max(1, R - n_drop_units)
+        score = np.array([1.0 - stats.block_sim.get(f"blocks.0.{r}", 0.0)
+                          for r in range(R)])
+        kept = np.sort(np.argsort(-score, kind="stable")[:keep_n])
+        params["blocks"] = [jax.tree.map(
+            lambda a: jnp.take(a, jnp.asarray(kept), axis=0),
+            params["blocks"][0])]
+        moved = {}
+        for new_i, old_i in enumerate(kept.tolist()):
+            pre_old, pre_new = f"blocks.0.{old_i}.", f"blocks.0.{new_i}."
+            for k in list(new_stats):
+                if k.startswith(pre_old):
+                    moved[pre_new + k[len(pre_old):]] = new_stats.pop(k)
+        for k in list(new_stats):
+            if k.startswith("blocks.0.") and k not in moved:
+                if int(k.split(".")[2]) >= keep_n:
+                    new_stats.pop(k)
+        new_stats.update(moved)
+        new_cfg = cfg.replace(n_layers=keep_n)
+    elif fam == "hybrid":
+        from repro.models.hybrid import layout
+        G, K, tail, _ = layout(cfg)
+        keep_n = max(1, G - n_drop_units)
+        score = np.zeros(G)
+        for g in range(G):
+            sims = [stats.block_sim.get(f"mamba_groups.{g}.{k}", 0.0)
+                    for k in range(K)]
+            score[g] = 1.0 - float(np.mean(sims))
+        kept = np.sort(np.argsort(-score, kind="stable")[:keep_n])
+        params["mamba_groups"] = jax.tree.map(
+            lambda a: jnp.take(a, jnp.asarray(kept), axis=0),
+            params["mamba_groups"])
+        moved = {}
+        for new_i, old_i in enumerate(kept.tolist()):
+            pre_old, pre_new = f"mamba_groups.{old_i}.", f"mamba_groups.{new_i}."
+            for k in list(new_stats):
+                if k.startswith(pre_old):
+                    moved[pre_new + k[len(pre_old):]] = new_stats.pop(k)
+        for k in list(new_stats):
+            if k.startswith("mamba_groups.") and k not in moved:
+                if int(k.split(".")[1]) >= keep_n:
+                    new_stats.pop(k)
+        new_stats.update(moved)
+        new_cfg = cfg.replace(n_layers=keep_n * (K + 1) + tail)
+    elif fam == "encdec":
+        ne, nd = cfg.n_enc_layers, cfg.n_dec_layers
+        scores = []
+        for i in range(ne):
+            scores.append((1.0 - stats.block_sim.get(f"enc_blocks.{i}", 0.0),
+                           "enc_blocks", i))
+        for i in range(nd):
+            scores.append((1.0 - stats.block_sim.get(f"dec_blocks.{i}", 0.0),
+                           "dec_blocks", i))
+        scores.sort()
+        drop_set = {"enc_blocks": set(), "dec_blocks": set()}
+        for s, lst, i in scores:
+            if len(drop_set["enc_blocks"]) + len(drop_set["dec_blocks"]) \
+                    >= n_drop_units:
+                break
+            if len(params[lst]) - len(drop_set[lst]) > 1:
+                drop_set[lst].add(i)
+        for lst in ("enc_blocks", "dec_blocks"):
+            kept = [i for i in range(len(params[lst]))
+                    if i not in drop_set[lst]]
+            params[lst] = [params[lst][i] for i in kept]
+            moved = {}
+            for new_i, old_i in enumerate(kept):
+                pre_old, pre_new = f"{lst}.{old_i}.", f"{lst}.{new_i}."
+                for k in list(new_stats):
+                    if k.startswith(pre_old):
+                        moved[pre_new + k[len(pre_old):]] = new_stats.pop(k)
+            for k in list(new_stats):
+                if k.startswith(f"{lst}.") and k not in moved:
+                    if int(k.split(".")[1]) >= len(kept):
+                        new_stats.pop(k)
+            new_stats.update(moved)
+        new_cfg = cfg.replace(
+            n_enc_layers=cfg.n_enc_layers - len(drop_set["enc_blocks"]),
+            n_dec_layers=cfg.n_dec_layers - len(drop_set["dec_blocks"]))
+    else:
+        return params, cfg, stats
+    return params, new_cfg, CalibStats(new_stats, stats.block_sim,
+                                       stats.n_tokens)
+
+
+# ---------------------------------------------------------------------------
+# expert pruning (MoE instance-optimization)
+# ---------------------------------------------------------------------------
+
+def prune_experts(params, cfg, stats: CalibStats, keep_e: int):
+    """Keep the ``keep_e`` most-routed experts per layer — the MoE analogue
+    of the paper's structural pruning, driven by *this query's* routing
+    distribution from calibration."""
+    if cfg.family != "moe" or keep_e >= cfg.n_experts:
+        return params, cfg, stats
+    assert keep_e >= cfg.top_k, (keep_e, cfg.top_k)
+    params = jax.tree.map(lambda a: a, params)
+    new_stats = dict(stats.weights)
+    E = cfg.n_experts
+
+    def prune_one(moe: Dict, paths: List[str]) -> Dict:
+        stacked = moe["router"].ndim == 3
+        R = moe["router"].shape[0] if stacked else 1
+        idx = np.zeros((R, keep_e), np.int64)
+        for r in range(R):
+            st = stats.get(paths[r] + ".router")
+            if st is not None and st.route_count is not None:
+                imp = st.route_count.astype(np.float64)
+                if st.route_prob is not None:
+                    imp = imp + 1e-3 * st.route_prob
+            else:
+                w = _np(moe["router"][r] if stacked else moe["router"])
+                imp = (w ** 2).sum(0)
+            idx[r] = np.sort(np.argsort(-imp, kind="stable")[:keep_e])
+        out = dict(moe)
+        if stacked:
+            out["router"] = _take_stacked(moe["router"], idx, 1)
+            out["wi"] = _take_stacked(moe["wi"], idx, 0)
+            out["wg"] = _take_stacked(moe["wg"], idx, 0)
+            out["wo"] = _take_stacked(moe["wo"], idx, 0)
+        else:
+            i0 = jnp.asarray(idx[0])
+            out["router"] = jnp.take(moe["router"], i0, 1)
+            out["wi"] = jnp.take(moe["wi"], i0, 0)
+            out["wg"] = jnp.take(moe["wg"], i0, 0)
+            out["wo"] = jnp.take(moe["wo"], i0, 0)
+        for r in range(R):
+            for nm in ("wi", "wg", "wo"):
+                key = paths[r] + "." + nm
+                st = new_stats.get(key)
+                if st is not None and st.sqnorm is not None:
+                    new_stats[key] = WeightStats(
+                        shape=(keep_e,) + tuple(st.shape[1:]),
+                        count=st.count,
+                        H=None if st.H is None else st.H[idx[r]],
+                        sqnorm=st.sqnorm[idx[r]],
+                        amax=st.amax[idx[r]],
+                    )
+            key = paths[r] + ".router"
+            st = new_stats.get(key)
+            if st is not None and st.route_count is not None:
+                st.route_count = st.route_count[idx[r]]
+                if st.route_prob is not None:
+                    st.route_prob = st.route_prob[idx[r]]
+        return out
+
+    from repro.models.transformer import pattern_unit
+    unit, R, tail = pattern_unit(cfg)
+    for u in range(len(unit)):
+        params["blocks"][u] = dict(params["blocks"][u])
+        params["blocks"][u]["moe"] = prune_one(
+            params["blocks"][u]["moe"],
+            [f"blocks.{u}.{r}.moe" for r in range(R)])
+    for i in range(tail):
+        params["tail"][i] = dict(params["tail"][i])
+        params["tail"][i]["moe"] = prune_one(params["tail"][i]["moe"],
+                                             [f"tail.{i}.moe"])
+    new_cfg = cfg.replace(n_experts=keep_e, top_k=min(cfg.top_k, keep_e))
+    return params, new_cfg, CalibStats(new_stats, stats.block_sim,
+                                       stats.n_tokens)

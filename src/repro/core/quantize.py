@@ -1,0 +1,158 @@
+"""Weight quantization: absmax round-to-nearest and GPTQ, plus SmoothQuant.
+
+All functions consume/produce numpy (compression is an offline, per-query
+step in IOLM-DB — single-digit minutes in the paper, §5.2); the result is
+packed into :class:`repro.core.compressed.QTensor` whose jnp/Pallas
+matmul runs in the serving path.
+
+GPTQ [Frantar et al. 21]: quantize weight columns (input dims) one at a
+time in Cholesky order of the inverse input Hessian H = X^T X, pushing
+the rounding error onto not-yet-quantized columns.  SmoothQuant [Xiao et
+al. 22]: per-channel scale s_j = amax_x(j)^alpha / amax_w(j)^(1-alpha)
+migrates activation outliers into weights before quantization; the
+inverse scale is carried in ``QTensor.in_scale``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compressed import QTensor, pack_int4
+
+
+def _qmax(bits: int) -> int:
+    return (1 << (bits - 1)) - 1          # 127 for int8, 7 for int4
+
+
+def _round_clip(w: np.ndarray, scale: np.ndarray, bits: int) -> np.ndarray:
+    q = np.rint(w / np.maximum(scale, 1e-12))
+    lo = -_qmax(bits) - 1
+    return np.clip(q, lo, _qmax(bits))
+
+
+def group_scales(w: np.ndarray, bits: int, group: int) -> np.ndarray:
+    """absmax scale per (input group, output channel): [d_in/g, d_out]."""
+    d_in, d_out = w.shape
+    wg = w.reshape(d_in // group, group, d_out)
+    return np.abs(wg).max(1) / _qmax(bits) + 1e-12
+
+
+def choose_group(d_in: int, group: int) -> int:
+    """Largest divisor of d_in that is <= requested group size."""
+    g = min(group, d_in)
+    while d_in % g:
+        g -= 1
+    return g
+
+
+def smooth_scales(amax_x: np.ndarray, w: np.ndarray,
+                  alpha: float = 0.5) -> np.ndarray:
+    """SmoothQuant per-input-channel migration scale s (apply w*s, x/s)."""
+    amax_w = np.abs(w).max(1) + 1e-9
+    ax = np.maximum(amax_x, 1e-9)
+    s = ax ** alpha / amax_w ** (1.0 - alpha)
+    s = s / np.exp(np.mean(np.log(s)))     # normalize geometric mean to 1
+    return np.clip(s, 1e-3, 1e3)
+
+
+def _pack(codes: np.ndarray, scale: np.ndarray, bits: int, group: int,
+          shape, in_scale: Optional[np.ndarray]) -> QTensor:
+    if bits == 4:
+        q = pack_int4(jnp.asarray(codes.astype(np.int8)))
+    else:
+        q = jnp.asarray(codes.astype(np.int8))
+    return QTensor(q, jnp.asarray(scale.astype(np.float32)), bits, group,
+                   tuple(shape),
+                   None if in_scale is None else
+                   jnp.asarray(in_scale.astype(np.float32)))
+
+
+def absmax_quantize(w: np.ndarray, *, bits: int = 8, group: int = 128,
+                    amax_x: Optional[np.ndarray] = None,
+                    smooth_alpha: float = 0.0) -> QTensor:
+    """Round-to-nearest group-wise quantization (the non-calibrated path)."""
+    w = np.asarray(w, np.float32)
+    in_scale = None
+    if smooth_alpha and amax_x is not None:
+        s = smooth_scales(amax_x, w, smooth_alpha)
+        w = w * s[:, None]
+        in_scale = 1.0 / s
+    g = choose_group(w.shape[0], group)
+    scale = group_scales(w, bits, g)
+    codes = _round_clip(w.reshape(w.shape[0] // g, g, -1),
+                        scale[:, None, :], bits).reshape(w.shape)
+    return _pack(codes, scale, bits, g, w.shape, in_scale)
+
+
+def gptq_quantize(w: np.ndarray, H: np.ndarray, *, bits: int = 8,
+                  group: int = 128, percdamp: float = 0.01,
+                  blocksize: int = 128,
+                  amax_x: Optional[np.ndarray] = None,
+                  smooth_alpha: float = 0.0,
+                  mask: Optional[np.ndarray] = None) -> QTensor:
+    """GPTQ quantization of ``w [d_in, d_out]`` with input Hessian ``H``.
+
+    ``mask`` (optional, [d_in, d_out] bool, True = keep): a sparsity
+    pattern to respect — masked-out entries are forced to code 0 and
+    their error is propagated like any rounding error, which is exactly
+    the SparseGPT + quantization composition the paper uses.
+    """
+    w = np.asarray(w, np.float64).copy()
+    H = np.asarray(H, np.float64).copy()
+    d_in, d_out = w.shape
+    in_scale = None
+    if smooth_alpha and amax_x is not None:
+        s = smooth_scales(amax_x, w.astype(np.float32), smooth_alpha)
+        w = w * s[:, None].astype(np.float64)
+        H = H / s[:, None] / s[None, :]    # H of the scaled inputs x/s
+        in_scale = 1.0 / s
+    g = choose_group(d_in, group)
+
+    dead = np.diag(H) <= 0
+    H[dead, dead] = 1.0
+    w[dead] = 0.0
+    damp = percdamp * np.mean(np.diag(H))
+    H[np.arange(d_in), np.arange(d_in)] += damp
+    # Hinv via Cholesky: process columns in natural order (group-aligned)
+    Hinv = np.linalg.inv(H)
+    # upper Cholesky of Hinv, as in the reference implementation
+    Lc = np.linalg.cholesky(Hinv)
+    U = Lc.T.copy()                        # upper triangular
+
+    codes = np.zeros_like(w)
+    scales = np.zeros((d_in // g, d_out), np.float64)
+    Q = np.zeros_like(w)
+
+    for bs in range(0, d_in, blocksize):
+        be = min(bs + blocksize, d_in)
+        Werr = np.zeros((be - bs, d_out))
+        for j in range(bs, be):
+            if j % g == 0:
+                # group scale from the *current* (error-compensated) block
+                je = min(j + g, d_in)
+                scales[j // g] = np.abs(w[j:je]).max(0) / _qmax(bits) + 1e-12
+            sc = scales[j // g]
+            q = _round_clip(w[j], sc, bits)
+            if mask is not None:
+                q = np.where(mask[j], q, 0.0)
+            dq = q * sc
+            codes[j] = q
+            Q[j] = dq
+            err = (w[j] - dq) / U[j, j]
+            w[j + 1:be] -= np.outer(U[j, j + 1:be], err)
+            Werr[j - bs] = err
+        if be < d_in:
+            w[be:] -= U[bs:be, be:].T @ Werr
+    return _pack(codes, scales, bits, g, (d_in, d_out), in_scale)
+
+
+def quant_error(w: np.ndarray, qt: QTensor,
+                H: Optional[np.ndarray] = None) -> float:
+    """||W - Ŵ||_F (or sqrt(tr(E^T H E)) — the proxy GPTQ minimizes)."""
+    wq = np.asarray(qt.dequantize(), np.float32)
+    e = np.asarray(w, np.float32) - wq
+    if H is None:
+        return float(np.linalg.norm(e))
+    return float(np.sqrt(max(np.einsum("io,ij,jo->", e, H, e), 0.0)))

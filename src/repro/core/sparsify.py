@@ -1,0 +1,140 @@
+"""Sparsification: Wanda and SparseGPT one-shot pruning + TPU block sparsity.
+
+Layout convention: weights are ``[d_in, d_out]`` — the reduction
+(input) dimension is axis 0, so N:M patterns group along axis 0 and
+comparison groups for per-output pruning run down columns.
+
+TPU adaptation (DESIGN.md §3): fine-grained 2:4 sparsity has no MXU
+support, so N:M/unstructured masks buy *model-size* reduction (they
+compose with int8/int4 storage), while ``block_sparse_mask`` prunes whole
+128-aligned blocks that the Pallas ``block_sparse_matmul`` kernel
+actually skips — that is where the FLOP/bandwidth savings come from.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compressed import BlockSparseTensor
+
+
+def wanda_mask(w: np.ndarray, act_norm: np.ndarray, *,
+               sparsity: float = 0.0, n: int = 0, m: int = 0) -> np.ndarray:
+    """Wanda importance |W| * ||x||: bool keep-mask [d_in, d_out].
+
+    ``n, m``: N:M structured (keep n of every m along the input dim);
+    otherwise unstructured at ``sparsity`` per output column.
+    """
+    w = np.asarray(w, np.float32)
+    score = np.abs(w) * np.asarray(act_norm, np.float32)[:, None]
+    d_in, d_out = w.shape
+    if m:
+        assert d_in % m == 0, (d_in, m)
+        sg = score.reshape(d_in // m, m, d_out)
+        # rank within each m-group (ascending); keep the top n
+        rank = np.argsort(np.argsort(sg, axis=1), axis=1)
+        return (rank >= m - n).reshape(d_in, d_out)
+    k = int(round(sparsity * d_in))
+    if k <= 0:
+        return np.ones_like(w, bool)
+    # per-output-column threshold
+    kth = np.partition(score, k - 1, axis=0)[k - 1]
+    return score > kth[None, :]
+
+
+def sparsegpt_prune(w: np.ndarray, H: np.ndarray, *, sparsity: float = 0.0,
+                    n: int = 0, m: int = 0, percdamp: float = 0.01,
+                    blocksize: int = 128) -> Tuple[np.ndarray, np.ndarray]:
+    """SparseGPT one-shot pruning with error propagation.
+
+    Returns (pruned dense weight, keep-mask).  Importance within each
+    column block is  w^2 / diag(cholesky(H^-1))^2 ; pruned entries' error
+    is pushed onto not-yet-processed input dims exactly like GPTQ.
+    """
+    w = np.asarray(w, np.float64).copy()
+    H = np.asarray(H, np.float64).copy()
+    d_in, d_out = w.shape
+    dead = np.diag(H) <= 0
+    H[dead, dead] = 1.0
+    w[dead] = 0.0
+    H[np.arange(d_in), np.arange(d_in)] += percdamp * np.mean(np.diag(H))
+    U = np.linalg.cholesky(np.linalg.inv(H)).T
+
+    mask = np.ones((d_in, d_out), bool)
+    if m:
+        blocksize = max(blocksize - blocksize % m, m)
+    for bs in range(0, d_in, blocksize):
+        be = min(bs + blocksize, d_in)
+        diag = np.diag(U)[bs:be]
+        score = (w[bs:be] ** 2) / (diag[:, None] ** 2)
+        if m:
+            nb = (be - bs) // m
+            sg = score[: nb * m].reshape(nb, m, d_out)
+            rank = np.argsort(np.argsort(sg, axis=1), axis=1)
+            mask[bs:bs + nb * m] = (rank >= m - n).reshape(nb * m, d_out)
+        else:
+            k = int(round(sparsity * (be - bs)))
+            if k > 0:
+                kth = np.partition(score, k - 1, axis=0)[k - 1]
+                mask[bs:be] = score > kth[None, :]
+        Werr = np.zeros((be - bs, d_out))
+        for j in range(bs, be):
+            keep = mask[j]
+            wj = np.where(keep, w[j], 0.0)
+            err = (w[j] - wj) / U[j, j]
+            w[j] = wj
+            w[j + 1:be] -= np.outer(U[j, j + 1:be], err)
+            Werr[j - bs] = err
+        if be < d_in:
+            w[be:] -= U[bs:be, be:].T @ Werr
+    return w.astype(np.float32), mask
+
+
+def block_scores(w: np.ndarray, act_norm: Optional[np.ndarray],
+                 bs: int) -> np.ndarray:
+    """Importance of each bs x bs block: sum |W| * ||x|| within block."""
+    w = np.asarray(w, np.float32)
+    d_in, d_out = w.shape
+    s = np.abs(w)
+    if act_norm is not None:
+        s = s * np.asarray(act_norm, np.float32)[:, None]
+    nb_i, nb_o = d_in // bs, d_out // bs
+    return s[: nb_i * bs, : nb_o * bs].reshape(nb_i, bs, nb_o, bs).sum((1, 3))
+
+
+def block_sparse_mask(w: np.ndarray, *, bs: int, density: float,
+                      act_norm: Optional[np.ndarray] = None) -> np.ndarray:
+    """Keep-mask over blocks [d_in/bs, d_out/bs] at the target density,
+    chosen per block-column so every output tile keeps the same number of
+    input blocks (the Pallas kernel then has a uniform gather length)."""
+    sc = block_scores(w, act_norm, bs)
+    nb_i, nb_o = sc.shape
+    keep = max(1, int(round(density * nb_i)))
+    kth = np.partition(-sc, keep - 1, axis=0)[keep - 1]
+    mask = (-sc) <= kth[None, :]
+    # enforce exactly `keep` per column (ties)
+    for c in np.nonzero(mask.sum(0) != keep)[0]:
+        order = np.argsort(-sc[:, c], kind="stable")
+        mask[:, c] = False
+        mask[order[:keep], c] = True
+    return mask
+
+
+def apply_block_mask(w, mask: np.ndarray, bs: int) -> BlockSparseTensor:
+    """Zero the pruned blocks and wrap as BlockSparseTensor (with the
+    per-output-block-column gather indices the Pallas kernel consumes)."""
+    w = np.asarray(w, np.float32)
+    big = np.kron(mask.astype(np.float32), np.ones((bs, bs), np.float32))
+    wz = (w * big[: w.shape[0], : w.shape[1]]).astype(np.float32)
+    keep = int(mask[:, 0].sum())
+    assert (mask.sum(0) == keep).all(), "non-uniform block column density"
+    idx = np.stack([np.nonzero(mask[:, c])[0] for c in range(mask.shape[1])])
+    return BlockSparseTensor(jnp.asarray(wz, jnp.bfloat16),
+                             jnp.asarray(mask.astype(np.float32)), bs,
+                             jnp.asarray(idx.astype(np.int32)))
+
+
+def density(mask: np.ndarray) -> float:
+    return float(np.mean(mask))

@@ -1,0 +1,350 @@
+"""Per-architecture PartitionSpec rules: DP / TP / EP / SP on one mesh.
+
+Axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  Batch parallelism runs over ("pod","data"); tensor
+parallelism over "model"; expert parallelism places experts on "data"
+(tokens flow to experts via XLA all-to-all); sequence parallelism puts
+the KV-cache/sequence axis on "data" when the batch axis cannot use it
+(long-context, batch=1).
+
+Rules are divisibility-guarded: a dim is sharded only when the axis size
+divides it, otherwise it degrades to replication — every (arch x shape x
+mesh) cell lowers to a *valid* program, and the roofline analysis then
+shows what the degradation costs.
+
+Megatron-style attention TP: wq column-parallel over heads, wk/wv
+column-parallel only when kv-heads divide the model axis (else KV is
+replicated — the standard GQA fallback), wo row-parallel.  MLP: wi/wg
+column-, wo row-parallel.  Embedding vocab-sharded, unembed
+vocab-column-sharded.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for a in names:
+        n *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    return int(n)
+
+
+def _div(dim: int, n: int) -> bool:
+    return n > 1 and dim % n == 0
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+_COL = {"wq", "wi", "wg", "in_proj", "wa1", "unembed"}   # d_out -> model
+_ROW = {"wo", "out_proj", "wa2"}                          # d_in  -> model
+_KV = {"wk", "wv"}                                        # guarded by kv div
+_REPL = {"router", "mu", "w0", "u", "gn", "conv_w", "conv_b", "A_log", "D",
+         "dt_bias", "pos_enc", "pos_dec"}
+
+
+def _leaf_name(path) -> str:
+    """Last string key (skips container-child index keys, e.g. QTensor.q)."""
+    for p in reversed(path):
+        k = getattr(p, "key", None)
+        if isinstance(k, str):
+            return k
+    return ""
+
+
+def _path_str(path) -> str:
+    return ".".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_spec_fn(cfg, mesh: Mesh, *, fsdp: bool = False):
+    """Returns fn(path, shape_tuple) -> PartitionSpec for raw params."""
+    M = axis_size(mesh, "model")
+    D = axis_size(mesh, "data")
+    kv_ok = _div(cfg.n_kv_heads, M)
+
+    def spec(path, shape) -> P:
+        name = _leaf_name(path)
+        pstr = _path_str(path)
+        rank = len(shape)
+        lead = rank - 2          # stacked layer axes before the matrix
+        pre = (None,) * max(lead, 0)
+
+        def guard(s: P) -> P:
+            """Drop shardings that don't divide; optionally add FSDP."""
+            dims = list(s)
+            out = []
+            for i, ax in enumerate(dims):
+                d = shape[lead + i] if lead >= 0 else shape[i]
+                if ax is None:
+                    out.append(None)
+                elif _div(d, axis_size(mesh, ax)):
+                    out.append(ax)
+                else:
+                    out.append(None)
+            # FSDP: shard the remaining replicated matrix dim over data
+            if fsdp and rank >= 2:
+                for i in range(len(out)):
+                    d = shape[lead + i]
+                    if out[i] is None and _div(d, D):
+                        out[i] = "data"
+                        break
+            return P(*pre, *out)
+
+        if name == "embed":
+            return guard(P("model", None)) if rank == 2 else P()
+        if rank < 2 or name in _REPL or "ln" in name or name == "w" \
+                or name == "b":
+            return P(*(None,) * rank)
+        # MoE expert stacks: [.., E, d_in, d_out]
+        if ".moe." in f".{pstr}." and name in ("wi", "wg", "wo"):
+            E = shape[lead - 1] if lead >= 1 else shape[0]
+            e_ax = "data" if _div(E, D) else None
+            epre = (None,) * max(lead - 1, 0)
+            if name == "wo":
+                body = ("model" if _div(shape[-2], M) else None, None)
+            else:
+                body = (None, "model" if _div(shape[-1], M) else None)
+            if fsdp and e_ax is None:
+                pass
+            return P(*epre, e_ax, *body)
+        if name in _COL:
+            return guard(P(None, "model"))
+        if name in _ROW:
+            return guard(P("model", None))
+        if name in _KV:
+            if ".cm." in f".{pstr}.":        # rwkv channel-mix: plain MLP
+                return guard(P(None, "model") if name == "wk"
+                             else P("model", None))
+            if kv_ok:
+                return guard(P(None, "model"))
+            return guard(P(None, None))      # replicate KV (GQA fallback)
+        if name in ("wr", "wg2"):
+            return guard(P(None, "model"))
+        return P(*(None,) * rank)
+
+    return spec
+
+
+def param_shardings(cfg, params_or_shapes, mesh: Mesh, *, fsdp: bool = False):
+    """NamedSharding pytree for a (possibly abstract) param tree."""
+    fn = param_spec_fn(cfg, mesh, fsdp=fsdp)
+
+    def one(path, leaf):
+        return NamedSharding(mesh, fn(path, tuple(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(one, params_or_shapes)
+
+
+def opt_state_shardings(param_specs_tree, mesh: Mesh, kind: str = "adamw"):
+    """Optimizer-state shardings derived from param shardings.
+
+    adamw: m/v mirror params.  adafactor: vr keeps the row spec, vc the
+    column spec of the factored matrix.
+    """
+    if kind == "adamw":
+        return {"m": param_specs_tree, "v": param_specs_tree}
+
+    def factored(sh):
+        spec = sh.spec
+        if len(spec) >= 2:
+            return {"vr": NamedSharding(mesh, P(*spec[:-1])),
+                    "vc": NamedSharding(mesh, P(*spec[:-2], spec[-1]))}
+        return {"v": sh}
+
+    return {"f": jax.tree.map(factored, param_specs_tree)}
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_shardings(cfg, batch_shapes: Dict[str, Any], mesh: Mesh):
+    """Token/label/frontend-stub input shardings (DP, falling back to SP)."""
+    dp = dp_axes(mesh)
+    dpn = axis_size(mesh, dp)
+
+    def one(name, sds):
+        shape = sds.shape
+        rank = len(shape)
+        B = shape[0]
+        bspec = dp if _div(B, dpn) else None
+        if rank == 2:        # tokens / labels [B, S]
+            S = shape[1]
+            sspec = None
+            if bspec is None and _div(S, axis_size(mesh, "data")) and S > 1:
+                sspec = "data"       # sequence parallelism for batch=1 cells
+            return NamedSharding(mesh, P(bspec, sspec))
+        if rank == 3:        # frame/patch embeddings [B, T, d]
+            return NamedSharding(
+                mesh, P(bspec, None,
+                        "model" if _div(shape[-1], axis_size(mesh, "model"))
+                        else None))
+        return NamedSharding(mesh, P(bspec, *(None,) * (rank - 1)))
+
+    return {k: one(k, v) for k, v in batch_shapes.items()}
+
+
+def cache_shardings(cfg, cache_shapes, mesh: Mesh):
+    """KV-cache / recurrent-state shardings.
+
+    Attention k/v leaves [..., B, T, K, hd]: batch over DP when it
+    divides, else the sequence axis goes to "data" (SP — the long_500k
+    cells); KV heads over "model" when they divide, else head_dim.
+    Recurrent states (rwkv S, mamba h/conv): batch over DP.
+    """
+    dp = dp_axes(mesh)
+    dpn = axis_size(mesh, dp)
+    M = axis_size(mesh, "model")
+    Dn = axis_size(mesh, "data")
+
+    def one(path, sds):
+        shape = sds.shape
+        rank = len(shape)
+        name = _leaf_name(path)
+        if name in ("k", "v") and rank >= 4:
+            B, T, K, hd = shape[-4], shape[-3], shape[-2], shape[-1]
+            pre = (None,) * (rank - 4)
+            bspec = dp if _div(B, dpn) else None
+            tspec = None
+            if bspec is None and _div(T, Dn):
+                tspec = "data"
+            kspec, hspec = None, None
+            if _div(K, M):
+                kspec = "model"
+            elif OPT["kv_seq_shard"] and tspec is None and _div(T, M):
+                tspec = "model"          # sequence-shard the cache instead
+            elif _div(hd, M):
+                hspec = "model"
+            return NamedSharding(mesh, P(*pre, bspec, tspec, kspec, hspec))
+        if name in ("S", "h") and rank >= 4:  # rwkv S / mamba h [..,B,H,*,*]
+            pre = (None,) * (rank - 4)
+            B, H = shape[-4], shape[-3]
+            bspec = dp if _div(B, dpn) else None
+            hspec = "model" if _div(H, M) else None
+            return NamedSharding(mesh, P(*pre, bspec, hspec, None, None))
+        if name == "conv" and rank >= 3:      # mamba conv state [..,B,K-1,ch]
+            pre = (None,) * (rank - 3)
+            bspec = dp if _div(shape[-3], dpn) else None
+            return NamedSharding(mesh, P(*pre, bspec, None, None))
+        if name in ("tm_x", "cm_x") and rank >= 2:  # rwkv shifts [..,B,d]
+            pre = (None,) * (rank - 2)
+            bspec = dp if _div(shape[-2], dpn) else None
+            return NamedSharding(mesh, P(*pre, bspec, None))
+        if name == "enc_len":
+            B = shape[-1]
+            return NamedSharding(mesh, P(dp if _div(B, dpn) else None))
+        return NamedSharding(mesh, P(*(None,) * rank))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def logits_sharding(cfg, mesh: Mesh, batch: int):
+    dp = dp_axes(mesh)
+    bspec = dp if _div(batch, axis_size(mesh, dp)) else None
+    vspec = "model" if _div(cfg.vocab_size, axis_size(mesh, "model")) else None
+    return NamedSharding(mesh, P(bspec, None, vspec))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# activation sharding (Megatron-style sequence parallelism between layers)
+# ---------------------------------------------------------------------------
+# Remat saves each scan step's block input: [B_loc, S, d] x n_layers.  At
+# train_4k that is tens of GB per device unless the sequence axis is also
+# sharded between layers; GSPMD then all-gathers S at each attention/MLP
+# entry and reduce-scatters at exit.  The constraint is installed per
+# lowering (the models call constrain() unconditionally; it is a no-op
+# unless a spec is active and divisibility holds).
+
+_ACT_SHARDING = None
+
+# ---------------------------------------------------------------------------
+# §Perf opt-in switches (EXPERIMENTS.md §Perf): the hillclimb iterations.
+# Baselines lower with everything False; `set_opt(...)`/env DRYRUN_OPT
+# flips individual optimizations for the before/after measurements.
+# ---------------------------------------------------------------------------
+OPT = {
+    # MoE dispatch buffers [E, C, d] get explicit token/expert sharding +
+    # capacity rounded to a shardable multiple (qwen/arctic cells)
+    "moe_sharded_dispatch": False,
+    # decode KV update as masked select instead of batch-indexed scatter
+    # (keeps the cache sharding; kills the involuntary all-gather)
+    "masked_cache_update": False,
+    # decode KV cache sequence-sharded over "model" when kv-heads don't
+    # divide it (cross-shard softmax costs tiny psums; head_dim-sharding
+    # makes GSPMD all-gather the whole cache every step)
+    "kv_seq_shard": False,
+    # blocked-flash attention already at 4k sequences (train cells)
+    "flash_at_4k": False,
+    # decode-time MoE capacity 4x mean load instead of dropless C=T
+    "moe_decode_capacity": False,
+    # eval capacity factor 1.25 instead of 2.0 (probability-ordered
+    # dropping makes the extra slack unnecessary)
+    "moe_eval_cf125": False,
+}
+
+
+def set_opt(**kw) -> None:
+    for k, v in kw.items():
+        assert k in OPT, k
+        OPT[k] = bool(v)
+
+
+def set_opt_from_env(env: str = "") -> None:
+    for k in env.split(","):
+        k = k.strip()
+        if k:
+            set_opt(**{k: True})
+
+
+def constrain_moe(x):
+    """Sharding constraint for MoE dispatch tensors [E, C, d_or_ff]."""
+    if not OPT["moe_sharded_dispatch"] or _ACT_SHARDING is None \
+            or x.ndim != 3:
+        return x
+    mesh = _ACT_SHARDING.mesh
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    E, C, d = x.shape
+    e_ax = "data" if E % sizes.get("data", 1) == 0 else None
+    c_ax = "data" if e_ax is None and C % sizes.get("data", 1) == 0 else None
+    d_ax = "model" if d % sizes.get("model", 1) == 0 else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(e_ax, c_ax, d_ax)))
+
+
+def set_activation_sharding(ns) -> None:
+    """ns: NamedSharding for [B, S, d] activations, or None to disable."""
+    global _ACT_SHARDING
+    _ACT_SHARDING = ns
+
+
+def constrain(x):
+    ns = _ACT_SHARDING
+    if ns is None or x.ndim != 3:
+        return x
+    for dim, ax in zip(x.shape, ns.spec):
+        if ax is not None:
+            n = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                n *= dict(zip(ns.mesh.axis_names, ns.mesh.devices.shape))[a]
+            if dim % n:
+                return x
+    return jax.lax.with_sharding_constraint(x, ns)

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the compute hot-spots IOLM-DB optimizes:
+int8 dequant-in-VMEM matmul, block-sparse (tile-skipping) matmul, and
+flash attention.  ops.py = jit'd wrappers, ref.py = pure-jnp oracles."""

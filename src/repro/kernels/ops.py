@@ -1,0 +1,100 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Shape plumbing lives here: flattening batch dims, padding to tile
+multiples, head/batch reshapes for attention, and the interpret-mode
+fallback so the kernels run (slowly, but bit-faithfully) on CPU for
+tests.  ``repro.core.compressed.matmul`` and the model layers call these
+when ``use_kernels(True)`` is active.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_sparse import block_sparse_matmul_kernel
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.quant_matmul import quant_matmul_kernel
+
+
+@functools.lru_cache(None)
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x2, bm):
+    M = x2.shape[0]
+    pad = (-M) % bm
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    return x2, M
+
+
+def quant_matmul(x, q, scale, *, group: int, in_scale=None,
+                 interpret=None):
+    """x [..., K] @ dequant(q, scale) with int8 codes kept in HBM."""
+    if interpret is None:
+        interpret = _interpret_default()
+    K, N = q.shape
+    if in_scale is not None:
+        x = (x.astype(jnp.float32) * in_scale).astype(x.dtype)
+    x2 = x.reshape(-1, K)
+    bm = 128 if x2.shape[0] >= 128 else 8
+    x2, M = _pad_rows(x2, bm)
+    bk = 512 if K % 512 == 0 else K
+    while K % bk:
+        bk //= 2
+    bk = max(bk, group)
+    y = quant_matmul_kernel(x2, q, scale, group=group, bm=bm, bk=bk,
+                            bn=128 if N % 128 == 0 else N,
+                            interpret=interpret)
+    return y[:M].reshape(*x.shape[:-1], N)
+
+
+def block_sparse_matmul(x, w, idx, *, bs: int, interpret=None):
+    """x [..., K] @ block-sparse w, skipping pruned tiles via idx."""
+    if interpret is None:
+        interpret = _interpret_default()
+    K, N = w.shape
+    x2 = x.reshape(-1, K)
+    bm = 128 if x2.shape[0] >= 128 else 8
+    x2, M = _pad_rows(x2, bm)
+    y = block_sparse_matmul_kernel(x2, w, idx, bs=bs, bm=bm,
+                                   interpret=interpret)
+    return y[:M].reshape(*x.shape[:-1], N)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, q_offset: int = 0,
+                    interpret=None):
+    """q [B, S, H, D], k/v [B, T, Kh, D] -> [B, S, H, D] (GQA-aware)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, S, H, D = q.shape
+    _, T, Kh, _ = k.shape
+    G = H // Kh
+    # flatten heads into batch: [B*H, S, D] / [B*Kh, T, D]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Kh, T, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Kh, T, D)
+    bq = 256 if S % 256 == 0 else _largest_tile(S)
+    bkv = 256 if T % 256 == 0 else _largest_tile(T)
+    t_real = T
+    pad_t = (-T) % bkv
+    if pad_t:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_t), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_t), (0, 0)))
+    o = flash_attention_kernel(qf, kf, vf, group=G, causal=causal,
+                               window=window, softcap=softcap,
+                               t_real=t_real, q_offset=q_offset,
+                               bq=bq, bkv=bkv, interpret=interpret)
+    return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+def _largest_tile(n: int, cap: int = 256) -> int:
+    t = 1
+    for c in (8, 16, 32, 64, 128, 256):
+        if c <= cap and n % c == 0:
+            t = c
+    return t

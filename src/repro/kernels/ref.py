@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def quant_matmul(x, q, scale, *, group: int, in_scale=None):
+    """x [.., K] @ dequant(q [K, N] int8, scale [K/g, N]) -> [.., N]."""
+    K, N = q.shape
+    w = q.astype(jnp.float32).reshape(K // group, group, N) * scale[:, None, :]
+    w = w.reshape(K, N)
+    if in_scale is not None:
+        x = x.astype(jnp.float32) * in_scale
+    y = jnp.einsum("...i,io->...o", x.astype(jnp.float32), w)
+    return y
+
+
+def block_sparse_matmul(x, w, mask, *, bs: int):
+    """x [.., K] @ (w zeroed outside mask blocks) -> [.., N]."""
+    big = jnp.kron(mask.astype(jnp.float32),
+                   jnp.ones((bs, bs), jnp.float32))
+    wz = w.astype(jnp.float32) * big
+    return jnp.einsum("...i,io->...o", x.astype(jnp.float32), wz)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              softcap: float = 0.0, t_real: int = 0, q_offset: int = 0):
+    """q [BH, S, D], k/v [BK, T, D], GQA group = BH // BK -> [BH, S, D]."""
+    BH, S, D = q.shape
+    BK, T, _ = k.shape
+    G = BH // BK
+    t_real = t_real or T
+    kx = jnp.repeat(k, G, axis=0)
+    vx = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("hsd,htd->hst", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) / math.sqrt(D)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(S)[:, None] + q_offset
+    kpos = jnp.arange(T)[None, :]
+    mask = kpos < t_real
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("hst,htd->hsd", p, vx.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for the
+production meshes (16x16 single-pod, 2x16x16 multi-pod) every assigned
+architecture x input-shape cell must ``.lower().compile()`` under its
+sharding rules, fit per-device memory (``memory_analysis``), and yield
+the roofline terms (``cost_analysis`` + HLO collective parsing).
+
+Usage:
+  python -m repro.launch.dryrun --cell mistral-nemo-12b:train_4k:single
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+                                [--out results/dryrun.json]
+
+--all orchestrates one subprocess per cell (isolates compile memory,
+caches incrementally, survives individual failures).
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, input_specs, shape_supported
+from repro.configs import registry
+from repro.distributed import sharding as SH
+from repro.launch import hlo_analysis as HA
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.training import optimizer as OPT
+from repro.training.train_loop import make_train_step
+
+BIG_FOR_ADAFACTOR = 50e9     # params; arctic trains with adafactor + fsdp
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    best = 1
+    for d in range(1, cap + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
+def _quantize_specs(params_sds, cfg):
+    """Map compressible weight leaves to int8 QTensor ShapeDtypeStructs
+    (shape-level twin of pipeline._compress_weights — for lowering the
+    IOLM-compressed variant of a cell without real weights)."""
+    from repro.core.compressed import QTensor
+    from repro.core.pipeline import _is_target
+    from repro.core.calibrate import _path_str
+    from repro.core.quantize import choose_group
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_sds)
+    out = []
+    for path, leaf in flat:
+        p = _path_str(path)
+        if not _is_target(p, leaf):
+            out.append(leaf)
+            continue
+        d_in, d_out = leaf.shape[-2], leaf.shape[-1]
+        lead = leaf.shape[:-2]
+        g = choose_group(d_in, 128)
+        out.append(QTensor(
+            jax.ShapeDtypeStruct(lead + (d_in, d_out), jnp.int8),
+            jax.ShapeDtypeStruct(lead + (d_in // g, d_out), jnp.float32),
+            8, g, (d_in, d_out)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, unroll: bool = True):
+    """Returns (lowered_fn_args, jitted) ready to .lower()."""
+    cfg = registry.get_config(arch).replace(scan_unroll=unroll)
+    compress = os.environ.get("DRYRUN_COMPRESS", "")
+    if compress:
+        kv = dict(item.split("=") for item in compress.split(",") if item)
+        if "experts_keep" in kv and cfg.family == "moe":
+            cfg = cfg.replace(n_experts=int(kv["experts_keep"]))
+        if "kv_keep" in kv:
+            K2 = int(kv["kv_keep"])
+            G = cfg.n_heads // cfg.n_kv_heads
+            cfg = cfg.replace(n_kv_heads=K2, n_heads=K2 * G,
+                              head_dim=cfg.resolved_head_dim)
+    spec = SHAPES[shape_name]
+    chips = mesh.devices.size
+    # Megatron-style sequence sharding of inter-layer activations (train/
+    # prefill): remat-saved [B_loc, S, d] residuals shard S over "model"
+    if spec.kind in ("train", "prefill"):
+        SH.set_activation_sharding(NamedSharding(
+            mesh, P(SH.dp_axes(mesh), "model", None)))
+    else:
+        SH.set_activation_sharding(None)
+    batch_sds = input_specs(cfg, shape_name)
+    batch_sh = SH.batch_shardings(cfg, batch_sds, mesh)
+    params_sds = jax.eval_shape(
+        lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+    if compress and "wbits" in (compress or ""):
+        params_sds = _quantize_specs(params_sds, cfg)
+    nparams = cfg.param_count()
+    # FSDP (ZeRO-3-style data-axis weight/optimizer sharding) for train
+    # cells whose replicated remainder would not fit HBM otherwise
+    fsdp = spec.kind == "train" and nparams > 5e9
+    param_sh = SH.param_shardings(cfg, params_sds, mesh, fsdp=fsdp)
+    repl = NamedSharding(mesh, P())
+
+    if spec.kind == "train":
+        use_adafactor = nparams > BIG_FOR_ADAFACTOR
+        opt = OPT.adafactor() if use_adafactor else OPT.adamw()
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        opt_sh = SH.opt_state_shardings(
+            param_sh, mesh, "adafactor" if use_adafactor else "adamw")
+        # streamed vocab projection: chunk must divide the loss length
+        s_loss = spec.seq_len - (cfg.n_img_tokens
+                                 if cfg.family == "vlm" else 0)
+        xent_chunk = 0
+        if cfg.vocab_size >= 32000 and cfg.family in ("dense", "moe", "vlm"):
+            xent_chunk = _largest_divisor(s_loss, 1024)
+        # 8 microbatches: activation live set drops 8x (batch 256 -> 32).
+        # encdec (whisper) uses 16: its non-causal 4k x 4k attention has
+        # no flash backward (custom-vjp is future work), so the [B,H,S,S]
+        # logits must shrink via the batch axis instead.
+        # The unrolled ANALYSIS build runs microbatches=1 instead: same
+        # total flops/bytes per step, but unrolling M microbatches x L
+        # layers would explode compile time.
+        micro = 16 if cfg.family == "encdec" else 8
+        step_fn = make_train_step(cfg, opt, xent_chunk=xent_chunk,
+                                  microbatches=1 if unroll else micro)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(param_sh, opt_sh, batch_sh, repl),
+                         donate_argnums=(0, 1))
+        args = (params_sds, opt_sds, batch_sds,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        return jitted, args
+
+    if spec.kind == "prefill":
+        step_fn = api.build_prefill_step(cfg, spec)
+        jitted = jax.jit(step_fn, in_shardings=(param_sh, batch_sh))
+        return jitted, (params_sds, batch_sds)
+
+    # decode
+    B = spec.global_batch
+    max_len = spec.seq_len
+    cache_sds = jax.eval_shape(
+        lambda: api.init_cache(cfg, B, max_len, compact_local=True))
+    cache_sh = SH.cache_shardings(cfg, cache_sds, mesh)
+    tok_sds = batch_sds["tokens"]
+    tok_sh = batch_sh["tokens"]
+    pos_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos_sh = NamedSharding(mesh, P(tok_sh.spec[0]))
+    step_fn = api.build_serve_step(cfg, spec)
+    jitted = jax.jit(step_fn,
+                     in_shardings=(param_sh, cache_sh, tok_sh, pos_sh),
+                     donate_argnums=(1,))
+    return jitted, (params_sds, cache_sds, tok_sds, pos_sds)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
+    SH.set_opt_from_env(os.environ.get("DRYRUN_OPT", ""))
+    cfg = registry.get_config(arch)
+    ok, reason = shape_supported(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(mesh.devices.size)
+    t0 = time.time()
+    # 1) runtime-faithful compile (compact lax.scan): memory analysis is
+    #    taken from THIS executable — it is what would run on the pod.
+    with mesh:
+        jitted, args = build_cell(arch, shape_name, mesh, unroll=False)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_scan = time.time() - t0 - t_lower
+        mem = HA.memory_per_device(compiled)
+        roof_scan = HA.analyze(compiled, chips)
+        del compiled, lowered
+    # 2) analysis compile (scan unrolled): XLA cost_analysis counts a
+    #    while-body once, so flops/bytes/collectives of the scan build
+    #    undercount by the trip count; the unrolled build gives the true
+    #    per-step totals for the roofline terms.
+    unrolled = False
+    roof = roof_scan
+    t_unroll = 0.0
+    if os.environ.get("DRYRUN_NO_UNROLL", "") != "1":
+        try:
+            t1 = time.time()
+            with mesh:
+                jitted_u, args_u = build_cell(arch, shape_name, mesh,
+                                              unroll=True)
+                compiled_u = jitted_u.lower(*args_u).compile()
+                roof = HA.analyze(compiled_u, chips)
+                del compiled_u, jitted_u
+            unrolled = True
+            t_unroll = time.time() - t1
+        except Exception:
+            roof = roof_scan
+    spec = SHAPES[shape_name]
+    mf = HA.model_flops(cfg, spec)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok", "chips": chips, "unrolled": unrolled,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_scan, 1),
+        "compile_unrolled_s": round(t_unroll, 1),
+        "memory": mem,
+        "bytes_per_device": mem.get("argument_size_in_bytes", 0)
+        + mem.get("temp_size_in_bytes", 0),
+        "roofline": roof.to_dict(),
+        "roofline_scan": roof_scan.to_dict(),
+        "model_flops": mf,
+        # MODEL_FLOPS / (device_flops x chips): <1 means remat/replication
+        # overhead, >1 means the mesh is bigger than the model needs
+        "useful_compute_frac": mf / (roof.flops * chips)
+        if roof.flops else 0.0,
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", help="arch:shape:mesh  (mesh = single|multi)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    if args.cell:
+        arch, shape, mesh_kind = args.cell.split(":")
+        try:
+            res = run_cell(arch, shape, mesh_kind)
+        except Exception as e:
+            res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        print("DRYRUN_RESULT " + json.dumps(res))
+        sys.exit(0 if res["status"] in ("ok", "skipped") else 1)
+
+    if not args.all:
+        ap.print_help()
+        return
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    archs = [args.arch] if args.arch else list(registry.ARCH_IDS)
+    # single-pod first (it feeds the roofline table), then multi-pod
+    cells = [(a, s, m) for m in meshes for a in archs for s in SHAPES]
+    for arch, shape, mesh_kind in cells:
+        key = f"{arch}:{shape}:{mesh_kind}"
+        if key in results and results[key].get("status") in ("ok", "skipped"):
+            continue
+        print(f"[dryrun] {key} ...", flush=True)
+        t0 = time.time()
+        env = {**os.environ, "PYTHONPATH": "src"}
+        if mesh_kind == "multi":
+            # the roofline table is single-pod; multi-pod cells only need
+            # the runtime-faithful compile (proves the pod axis shards)
+            env["DRYRUN_NO_UNROLL"] = "1"
+        try:
+            proc = subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun", "--cell", key],
+                capture_output=True, text=True, timeout=args.timeout,
+                env=env)
+        except subprocess.TimeoutExpired as te:
+            results[key] = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                            "status": "timeout",
+                            "wall_s": round(time.time() - t0, 1)}
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+            print(f"[dryrun] {key}: timeout", flush=True)
+            continue
+        res = None
+        for line in proc.stdout.splitlines():
+            if line.startswith("DRYRUN_RESULT "):
+                res = json.loads(line[len("DRYRUN_RESULT "):])
+        if res is None:
+            res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                   "status": "crash",
+                   "error": (proc.stderr or proc.stdout)[-2000:]}
+        res["wall_s"] = round(time.time() - t0, 1)
+        results[key] = res
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] {key}: {res['status']} ({res['wall_s']}s)",
+              flush=True)
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skipped")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, "
+          f"{len(results) - n_ok - n_skip} failed / {len(results)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Single pod: 256 chips as (data=16, model=16).  Multi-pod: 2 pods = 512
+chips as (pod=2, data=16, model=16) — the "pod" axis carries pure data
+parallelism (+ compressed gradient all-reduce, see
+training/grad_compress.py) because inter-pod links are an order of
+magnitude slower than in-pod ICI.
+
+A FUNCTION, not a module constant: importing this module must never
+touch jax device state (the dry-run needs to set XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over host devices (tests)."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,130 @@
+"""Family dispatch + step builders (train_step / prefill_step / serve_step).
+
+This is the single entry point used by the launcher, the dry-run, the
+serving engine, and the benchmarks: every architecture family exposes the
+same five functions (init_params / forward / init_cache / prefill /
+decode_step), and the step builders here assemble them into the jittable
+functions that get lowered per (arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, rwkv, transformer
+
+
+def family_module(cfg):
+    return {
+        "dense": transformer,
+        "moe": transformer,
+        "vlm": transformer,
+        "encdec": encdec,
+        "rwkv": rwkv,
+        "hybrid": hybrid,
+    }[cfg.family]
+
+
+def init_params(key, cfg):
+    return family_module(cfg).init_params(key, cfg)
+
+
+def forward(params, cfg, batch: Dict[str, Any], *, train: bool = False,
+            remat: bool = True, capture: bool = False, use_flash: bool = False):
+    """batch: dict from configs.input_specs (tokens / labels / enc_inputs /
+    img_embs).  Returns (logits, aux)."""
+    mod = family_module(cfg)
+    kw: Dict[str, Any] = dict(train=train, remat=remat, capture=capture)
+    if cfg.family == "encdec":
+        return mod.forward(params, cfg, batch["tokens"],
+                           enc_inputs=batch["enc_inputs"], **kw)
+    if cfg.family == "vlm":
+        return mod.forward(params, cfg, batch["tokens"],
+                           img_embs=batch.get("img_embs"),
+                           use_flash=use_flash, **kw)
+    if cfg.family in ("dense", "moe"):
+        kw["use_flash"] = use_flash
+    return mod.forward(params, cfg, batch["tokens"], **kw)
+
+
+def loss_fn(params, cfg, batch, *, xent_chunk: int = 0, remat: bool = True,
+            aux_weight: float = 0.01):
+    if cfg.family in ("dense", "moe", "vlm") :
+        return transformer.loss_fn(params, cfg, batch["tokens"], batch["labels"],
+                                   img_embs=batch.get("img_embs"),
+                                   xent_chunk=xent_chunk, remat=remat,
+                                   aux_weight=aux_weight)
+    logits, aux = forward(params, cfg, batch, train=True, remat=remat)
+    loss = transformer._xent(logits, batch["labels"]) / batch["labels"].size
+    return loss + aux_weight * aux["moe_aux"]
+
+
+def init_cache(cfg, batch: int, max_len: int, *, compact_local: bool = True):
+    mod = family_module(cfg)
+    return mod.init_cache(cfg, batch, max_len, compact_local=compact_local)
+
+
+def prefill(params, cfg, batch, *, max_len: int, compact_local: bool = True,
+            use_flash: bool = False):
+    mod = family_module(cfg)
+    kw: Dict[str, Any] = dict(max_len=max_len)
+    if cfg.family == "encdec":
+        return mod.prefill(params, cfg, batch["tokens"],
+                           enc_inputs=batch["enc_inputs"], **kw)
+    if cfg.family in ("dense", "moe", "vlm"):
+        kw.update(compact_local=compact_local, use_flash=use_flash)
+        return mod.prefill(params, cfg, batch["tokens"],
+                           img_embs=batch.get("img_embs"), **kw)
+    return mod.prefill(params, cfg, batch["tokens"], **kw)
+
+
+def decode_step(params, cfg, cache, tokens, pos, *, max_len: int):
+    return family_module(cfg).decode_step(params, cfg, cache, tokens, pos,
+                                          max_len=max_len)
+
+
+# ---------------------------------------------------------------------------
+# step builders (what the dry-run lowers)
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg, optimizer, *, xent_chunk: int = 0,
+                     grad_compress=None, donate: bool = True):
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    ``optimizer`` from repro.training.optimizer; ``grad_compress`` an
+    optional (compress, state) hook applied to grads pre-all-reduce.
+    """
+    def train_step(params, opt_state, batch, step):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, xent_chunk=xent_chunk))(params)
+        if grad_compress is not None:
+            grads = grad_compress(grads)
+        params, opt_state = optimizer.update(params, grads, opt_state, step)
+        gnorm = optimizer.global_norm(grads)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+    return train_step
+
+
+def build_prefill_step(cfg, shape_spec, *, compact_local: bool = True):
+    max_len = shape_spec.seq_len
+    def prefill_step(params, batch):
+        logits, cache = prefill(params, cfg, batch, max_len=max_len,
+                                compact_local=compact_local)
+        # return only last-position logits: engine gathers per-row lengths
+        return logits[:, -1:], cache
+    return prefill_step
+
+
+def build_serve_step(cfg, shape_spec):
+    """Single-token decode against a seq_len-deep cache (the assigned
+    ``decode_*``/``long_*`` cells lower THIS, not train_step)."""
+    max_len = shape_spec.seq_len
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = decode_step(params, cfg, cache, tokens, pos,
+                                    max_len=max_len)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, cache
+    return serve_step

@@ -1,0 +1,203 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention+MLP block.
+
+Layout: ``n_layers`` block applications where every (shared_attn_every+1)-th
+position applies the *same* transformer block (weight sharing across all
+sites).  Execution scans over (K mamba + 1 shared-attn) groups; the shared
+block's weights are closed over so every scan iteration reuses them —
+remaining mamba layers are appended via a second scan.
+
+Decode state: per-mamba-layer SSD/conv states + per-site KV caches for the
+shared block (same weights, distinct activations per site).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import transformer as TF
+
+Params = Dict[str, Any]
+
+
+def layout(cfg):
+    """(n_groups, group_k, n_tail_mamba, n_sites)."""
+    k = cfg.shared_attn_every
+    n_sites = cfg.n_layers // (k + 1)
+    n_mamba = cfg.n_layers - n_sites
+    n_groups = n_sites
+    tail = n_mamba - n_groups * k
+    return n_groups, k, tail, n_sites
+
+
+def init_params(key, cfg) -> Params:
+    dtype = cfg.dtype
+    G, K, tail, _ = layout(cfg)
+    k_emb, k_m, k_shared, k_tail, k_ln = jax.random.split(key, 5)
+    params = L.init_embed(k_emb, cfg, dtype)
+    grouped = jax.vmap(jax.vmap(lambda k: M.init_layer(k, cfg, dtype)))(
+        jax.random.split(k_m, G * K).reshape(G, K, 2))
+    params["mamba_groups"] = grouped            # leaves [G, K, ...]
+    params["shared"] = TF.init_block(k_shared, cfg, dtype)
+    params["mamba_tail"] = jax.vmap(lambda k: M.init_layer(k, cfg, dtype))(
+        jax.random.split(k_tail, tail)) if tail else None
+    params["ln_f"] = L.norm_init(cfg.d_model, dtype, cfg.norm_type)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / no-cache)
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, cfg, tokens, *, train: bool = False,
+            remat: bool = True, capture: bool = False, **_):
+    x = L.embed(params, cfg, tokens)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    G, K, tail, _ = layout(cfg)
+    shared = params["shared"]
+
+    def body(xc, group):
+        cap = (xc,) if capture else ()
+        for u in range(K):
+            p = jax.tree.map(lambda a: a[u], group)
+            xc, _ = M.block_apply(p, xc, cfg)
+        xc, _ = TF.block_apply(shared, xc, cfg, kind="G", positions=positions,
+                               train=train)
+        xc = constrain(xc)
+        return xc, (jnp.zeros((), jnp.float32), cap)
+
+    sb = jax.checkpoint(body) if (remat and not capture) else body
+    x, (auxs, caps) = jax.lax.scan(sb, x, params["mamba_groups"],
+                                   unroll=cfg.scan_unroll)
+    if params["mamba_tail"] is not None:
+        def tbody(xc, p):
+            xc, _ = M.block_apply(p, xc, cfg)
+            return xc, None
+        tb = jax.checkpoint(tbody) if (remat and not capture) else tbody
+        x, _ = jax.lax.scan(tb, x, params["mamba_tail"],
+                            unroll=cfg.scan_unroll)
+    x = L.norm(x, params["ln_f"], cfg)
+    logits = L.unembed(params, cfg, x)
+    aux = {"moe_aux": jnp.zeros((), jnp.float32)}
+    if capture:
+        aux["captures"] = {"blocks": [caps[0]], "tail": []}
+        aux["final_hidden"] = x
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# cache / decode / prefill
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, **_):
+    G, K, tail, n_sites = layout(cfg)
+    dt = cfg.dtype
+    Kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    one = M.init_layer_state(cfg, batch, dt)
+    grouped = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (G, K) + a.shape), one)
+    kv = {"k": jnp.zeros((n_sites, batch, max_len, Kh, hd), dt),
+          "v": jnp.zeros((n_sites, batch, max_len, Kh, hd), dt)}
+    tail_states = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (tail,) + a.shape), one) if tail else None
+    return {"mamba_groups": grouped, "shared_kv": kv, "mamba_tail": tail_states}
+
+
+def decode_step(params: Params, cfg, cache, tokens, pos, *, max_len: int):
+    B = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    x = L.embed(params, cfg, tokens)
+    G, K, tail, _ = layout(cfg)
+    shared = params["shared"]
+
+    def body(xc, xs):
+        group, states, kv = xs
+        new_states = []
+        for u in range(K):
+            p = jax.tree.map(lambda a: a[u], group)
+            st = jax.tree.map(lambda a: a[u], states)
+            xc, st2 = M.block_apply(p, xc, cfg, state=st)
+            new_states.append(st2)
+        xc, kv2 = TF.block_decode(shared, kv, xc, cfg, kind="G", pos=pos,
+                                  max_len=max_len)
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_states)
+        return xc, (stacked, kv2)
+
+    x, (mstates, kvs) = jax.lax.scan(
+        body, x, (params["mamba_groups"], cache["mamba_groups"],
+                  cache["shared_kv"]), unroll=cfg.scan_unroll)
+    new_tail = cache["mamba_tail"]
+    if params["mamba_tail"] is not None:
+        def tbody(xc, xs):
+            p, st = xs
+            xc, st2 = M.block_apply(p, xc, cfg, state=st)
+            return xc, st2
+        x, new_tail = jax.lax.scan(tbody, x,
+                                   (params["mamba_tail"], cache["mamba_tail"]),
+                                   unroll=cfg.scan_unroll)
+    x = L.norm(x, params["ln_f"], cfg)
+    logits = L.unembed(params, cfg, x)
+    return logits, {"mamba_groups": mstates, "shared_kv": kvs,
+                    "mamba_tail": new_tail}
+
+
+def prefill(params: Params, cfg, tokens, *, max_len: int, **_):
+    x = L.embed(params, cfg, tokens)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    G, K, tail, _ = layout(cfg)
+    shared = params["shared"]
+    Kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def kv_entry(k, v):
+        if S >= max_len:
+            return {"k": k[:, S - max_len:], "v": v[:, S - max_len:]}
+        pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+        return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+
+    def shared_prefill(xc):
+        h = L.norm(xc, shared["ln1"], cfg)
+        q, k, v = L._qkv(shared["attn"], h, cfg, positions, cfg.rope_theta)
+        out = L.best_attention(q, k, v, kind="G", cfg=cfg)
+        a = L.matmul(out.reshape(B, S, -1), shared["attn"]["wo"])
+        xc = xc + a
+        h = L.norm(xc, shared["ln2"], cfg)
+        xc = xc + L.mlp_block(shared["mlp"], h)
+        return xc, kv_entry(k, v)
+
+    def body(xc, xs):
+        group, states = xs
+        new_states = []
+        for u in range(K):
+            p = jax.tree.map(lambda a: a[u], group)
+            st = jax.tree.map(lambda a: a[u], states)
+            xc, st2 = M.block_apply(p, xc, cfg, state=st)
+            new_states.append(st2)
+        xc, kv = shared_prefill(xc)
+        xc = constrain(xc)
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_states)
+        return xc, (stacked, kv)
+
+    cache0 = init_cache(cfg, B, max_len)
+    x, (mstates, kvs) = jax.lax.scan(
+        jax.checkpoint(body), x, (params["mamba_groups"],
+                                  cache0["mamba_groups"]),
+        unroll=cfg.scan_unroll)
+    new_tail = cache0["mamba_tail"]
+    if params["mamba_tail"] is not None:
+        def tbody(xc, xs):
+            p, st = xs
+            xc, st2 = M.block_apply(p, xc, cfg, state=st)
+            return xc, st2
+        x, new_tail = jax.lax.scan(jax.checkpoint(tbody), x,
+                                   (params["mamba_tail"], cache0["mamba_tail"]),
+                                   unroll=cfg.scan_unroll)
+    x = L.norm(x, params["ln_f"], cfg)
+    logits = L.unembed(params, cfg, x)
+    return logits, {"mamba_groups": mstates, "shared_kv": kvs,
+                    "mamba_tail": new_tail}

@@ -1,0 +1,482 @@
+"""Shared neural-net layers for every architecture family.
+
+Functional style: ``init_*`` builds param dicts, ``apply_*``/plain
+functions are pure.  All linear projections go through
+``repro.core.compressed.matmul`` so instance-optimized (quantized /
+block-sparse) weights slot in transparently.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressed
+from repro.core.compressed import matmul
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def norm_init(d: int, dtype, norm_type: str = "rmsnorm"):
+    if norm_type == "layernorm":
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, p, offset: bool = False, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    w = p["w"].astype(jnp.float32)
+    w = 1.0 + w if offset else w
+    return (xf * w).astype(x.dtype)
+
+
+def layernorm(x, p, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x, p, cfg):
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, p)
+    return rmsnorm(x, p, offset=cfg.rms_offset)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [..., S] int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                 # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs        # [..., S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                                      # broadcast heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    depth_scale = 1.0 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "wq": dense_init(k1, d, H * hd, dtype),
+        "wk": dense_init(k2, d, K * hd, dtype),
+        "wv": dense_init(k3, d, K * hd, dtype),
+        "wo": dense_init(k4, H * hd, d, dtype, scale=depth_scale),
+    }
+
+
+def _qkv(p, x, cfg, positions, theta: float, use_rope: bool = True):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    q = matmul(x, p["wq"]).reshape(B, S, H, hd)
+    k = matmul(x, p["wk"]).reshape(B, S, K, hd)
+    v = matmul(x, p["wv"]).reshape(B, S, K, hd)
+    if use_rope:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cap: float):
+    """Grouped-query attention core.
+
+    q: [B, S, K, G, D]; k, v: [B, T, K, D]; mask: broadcastable to
+    [B, K, G, S, T] (True = attend).  f32 softmax.
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, cap)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def full_attention(q, k, v, *, causal: bool, cap: float = 0.0,
+                   window: int = 0, q_offset: int = 0):
+    """q: [B,S,H,D], k/v: [B,T,K,D].  Optional causal/window banding."""
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, D)
+    qpos = jnp.arange(S) + q_offset
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    out = _sdpa(qg, k, v, mask[None, None, None], cap)
+    return out.reshape(B, S, H, D)
+
+
+def local_block_attention(q, k, v, *, window: int, cap: float = 0.0):
+    """Sliding-window causal attention in O(S*W) via W-sized blocks.
+
+    Each query block attends to itself + the previous key block, which
+    covers every key within ``window``.  Requires S % window == 0.
+    Falls back to masked full attention when S <= window.
+    """
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    W = window
+    if S <= W:
+        return full_attention(q, k, v, causal=True, cap=cap, window=W)
+    assert S % W == 0, (S, W)
+    nb = S // W
+    G = H // K
+    qb = q.reshape(B, nb, W, K, G, D)
+    kb = k.reshape(B, nb, W, K, D)
+    vb = v.reshape(B, nb, W, K, D)
+    # previous block (zeros before the first)
+    prev = lambda a: jnp.concatenate([jnp.zeros_like(a[:, :1]), a[:, :-1]], axis=1)
+    k2 = jnp.concatenate([prev(kb), kb], axis=2)        # [B, nb, 2W, K, D]
+    v2 = jnp.concatenate([prev(vb), vb], axis=2)
+    scale = 1.0 / math.sqrt(D)
+    logits = jnp.einsum("bnskgd,bntkd->bnkgst", qb, k2,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, cap)
+    qpos = jnp.arange(W)[:, None] + W                   # within the 2W frame
+    kpos = jnp.arange(2 * W)[None, :]
+    mask = (qpos >= kpos) & (qpos - kpos < W)
+    first = jnp.arange(nb) == 0                          # no prev block
+    valid = jnp.where(first[:, None, None], kpos >= W, True)  # [nb,1,2W]
+    mask = mask[None, :, :] & valid                      # [nb, W, 2W]
+    logits = jnp.where(mask[None, :, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnkgst,bntkd->bnskgd", probs.astype(v2.dtype), v2,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, D).astype(v.dtype)
+
+
+def flash_attention_jnp(q, k, v, *, causal: bool = True, window: int = 0,
+                        cap: float = 0.0, q_offset: int = 0,
+                        bq: int = 1024, bkv: int = 1024,
+                        unroll: bool = False):
+    """Blocked online-softmax attention in pure XLA (the flash schedule).
+
+    Peak memory is one [B, H, bq, bkv] logits tile instead of the full
+    [B, H, S, T] matrix — this is what makes the 32k prefill cells fit
+    HBM; the Pallas kernel (repro.kernels) is the TPU-native version and
+    this is its jnp twin used under jit/SPMD.  ``unroll`` follows
+    cfg.scan_unroll so the dry-run's cost analysis sees every tile.
+    """
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    bq, bkv = min(bq, S), min(bkv, T)
+    assert S % bq == 0 and T % bkv == 0, (S, T, bq, bkv)
+    nq, nk = S // bq, T // bkv
+    scale = 1.0 / math.sqrt(D)
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, K, G, D), 1, 0)   # [nq,B,bq,K,G,D]
+    kb = jnp.moveaxis(k.reshape(B, nk, bkv, K, D), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bkv, K, D), 1, 0)
+
+    def q_step(_, qi):
+        qblk, i = qi                                   # [B,bq,K,G,D], scalar
+        qpos = i * bq + jnp.arange(bq) + q_offset
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kblk, vblk, j = kj
+            kpos = j * bkv + jnp.arange(bkv)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, cap)
+            mask = jnp.ones((bq, bkv), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m2 = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m2[..., None])
+            corr = jnp.exp(m - m2)
+            l2 = l * corr + p.sum(-1)
+            acc2 = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m2, l2, acc2), None
+
+        init = (jnp.full((B, K, G, bq), -1e30, jnp.float32),
+                jnp.zeros((B, K, G, bq), jnp.float32),
+                jnp.zeros((B, K, G, bq, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init,
+                                      (kb, vb, jnp.arange(nk)),
+                                      unroll=unroll)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = jnp.moveaxis(out, 3, 1)                  # [B,bq,K,G,D]
+        return None, out.reshape(B, bq, H, D).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)),
+                           unroll=unroll)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, D)
+
+
+# threshold above which full [S, T] logits would dominate HBM
+_FLASH_MIN_ELEMS = 1 << 26
+_FLASH_MIN_ELEMS_OPT = 1 << 24    # §Perf flash_at_4k: flash from 4k up
+
+
+def best_attention(q, k, v, *, kind: str, cfg, q_offset: int = 0,
+                   causal: bool = True):
+    """Dispatch: local-block for window layers, blocked-flash for long
+    global sequences, plain masked attention otherwise."""
+    S, T = q.shape[1], k.shape[1]
+    if kind == "L" and S > cfg.window_size and causal:
+        return local_block_attention(q, k, v, window=cfg.window_size,
+                                     cap=cfg.attn_softcap)
+    from repro.distributed.sharding import OPT
+    thresh = _FLASH_MIN_ELEMS_OPT if OPT["flash_at_4k"] else _FLASH_MIN_ELEMS
+    win = cfg.window_size if kind == "L" else 0
+    if S * T >= thresh and S % 1024 == 0 and T % 1024 == 0:
+        # analysis builds (scan_unroll) use 2x2 mega-tiles: total flops are
+        # tile-size-invariant (every tile is computed then masked), so the
+        # unrolled cost is faithful without a 32x32-tile compile blowup
+        bq = max(1024, S // 2) if cfg.scan_unroll else 1024
+        bkv = max(1024, T // 2) if cfg.scan_unroll else 1024
+        return flash_attention_jnp(q, k, v, causal=causal, window=win,
+                                   cap=cfg.attn_softcap, q_offset=q_offset,
+                                   bq=bq, bkv=bkv, unroll=cfg.scan_unroll)
+    return full_attention(q, k, v, causal=causal, cap=cfg.attn_softcap,
+                          window=win, q_offset=q_offset)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, cap: float = 0.0,
+                     window: int = 0):
+    """Single-step attention: q [B,1,H,D] vs cache [B,T,K,D], valid to kv_len.
+
+    ``window``: restrict to the trailing ``window`` positions (local layers).
+    """
+    B, _, H, D = q.shape
+    T, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, 1, K, G, D)
+    pos = jnp.arange(T)
+    kv = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
+    mask = pos[None, :] < kv[:, None]
+    if window:
+        mask &= pos[None, :] >= (kv[:, None] - window)
+    out = _sdpa(qg, k_cache, v_cache, mask[:, None, None, None, :], cap)
+    return out.reshape(B, 1, H, D)
+
+
+def attention_block(p, x, cfg, *, kind: str, positions, theta: float,
+                    use_flash: bool = False):
+    """Full-sequence (train/prefill) attention incl. projections."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions, theta)
+    if use_flash:
+        from repro.kernels import ops as kops
+        win = cfg.window_size if kind == "L" else 0
+        out = kops.flash_attention(q, k, v, causal=True, window=win,
+                                   softcap=cfg.attn_softcap)
+    else:
+        out = best_attention(q, k, v, kind=kind, cfg=cfg)
+    return matmul(out.reshape(B, S, -1), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, dtype, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    depth_scale = 1.0 / math.sqrt(2 * max(cfg.n_layers, 1))
+    p = {
+        "wi": dense_init(k1, d, ff, dtype),
+        "wo": dense_init(k3, ff, d, dtype, scale=depth_scale),
+    }
+    if cfg.mlp_gated:
+        p["wg"] = dense_init(k2, d, ff, dtype)
+    return p
+
+
+def mlp_block(p, x):
+    if "wg" in p:
+        h = jax.nn.silu(matmul(x, p["wg"])) * matmul(x, p["wi"])
+    else:
+        h = jax.nn.gelu(matmul(x, p["wi"]))
+    return matmul(h, p["wo"])
+
+
+def init_moe(key, cfg, dtype):
+    d, ffe, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    keys = jax.random.split(key, 4)
+    depth_scale = 1.0 / math.sqrt(2 * max(cfg.n_layers, 1))
+
+    def expert_init(k, d_in, d_out, scale=1.0):
+        std = scale / math.sqrt(d_in)
+        return (jax.random.normal(k, (E, d_in, d_out), jnp.float32) * std).astype(dtype)
+
+    return {
+        "router": dense_init(keys[0], d, E, jnp.float32),
+        "wi": expert_init(keys[1], d, ffe),
+        "wg": expert_init(keys[2], d, ffe),
+        "wo": expert_init(keys[3], ffe, d, scale=depth_scale),
+    }
+
+
+def moe_capacity(n_tokens: int, cfg, train: bool) -> int:
+    # eval on small token counts (decode steps, interactive batches) is
+    # dropless so prefill/decode agree bit-for-bit with the full forward;
+    # large prefills fall back to capacity-bounded dispatch with
+    # probability-ordered dropping (lowest-gate entries dropped first).
+    from repro.distributed.sharding import OPT
+    if not train and n_tokens <= 4096:
+        if OPT["moe_decode_capacity"]:
+            # §Perf: 4x mean expert load instead of dropless C = T
+            cap = int(math.ceil(4.0 * n_tokens * cfg.top_k / cfg.n_experts))
+            return max(8, min(-(-cap // 8) * 8, n_tokens))
+        return n_tokens
+    cf = cfg.capacity_factor if train else (
+        1.25 if OPT["moe_eval_cf125"] else 2.0)
+    cap = int(math.ceil(n_tokens * cfg.top_k * cf / cfg.n_experts))
+    if OPT["moe_sharded_dispatch"]:
+        cap = -(-cap // 256) * 256          # shardable token-axis multiple
+    return max(8, min(cap, n_tokens))
+
+
+def moe_block(p, x, cfg, *, train: bool) -> Tuple[jax.Array, jax.Array]:
+    """Scatter/gather top-k MoE (EP-shardable; see DESIGN.md §6).
+
+    x: [B, S, d] -> (out [B, S, d], aux load-balance loss scalar).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = matmul(xt, p["router"]).astype(jnp.float32)          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                          # [T, k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (Switch-style): E * sum_e f_e * p_e
+    onehot_all = jax.nn.one_hot(eidx, E, dtype=jnp.float32).sum(1)  # [T, E]
+    f = onehot_all.mean(0)
+    pmean = probs.mean(0)
+    aux = E * jnp.sum(f * pmean)
+
+    C = moe_capacity(T, cfg, train)
+    # position of each (token, choice) within its expert: ranks via cumsum.
+    # When capacity can drop entries, rank in gate-probability order so the
+    # lowest-confidence (token, choice) pairs are dropped first.
+    flat_e = eidx.reshape(-1)                                      # [T*k]
+    if C < T * k:
+        # stop_gradient: routing order is not differentiated (and this
+        # jaxlib rejects the batched-gather JVP a differentiable sort
+        # would emit)
+        order = jnp.argsort(jax.lax.stop_gradient(-gates.reshape(-1)))
+        inv = jnp.argsort(order)
+        onehot = jax.nn.one_hot(flat_e[order], E, dtype=jnp.int32)
+        pos = (jnp.cumsum(onehot, axis=0) - onehot)
+        ppos_sorted = jnp.take_along_axis(
+            pos, flat_e[order][:, None], axis=1)[:, 0]
+        ppos = ppos_sorted[inv]                                    # [T*k]
+    else:
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # [T*k, E]
+        pos = (jnp.cumsum(onehot, axis=0) - onehot)                # exclusive
+        ppos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = ppos < C
+    tok = jnp.repeat(jnp.arange(T), k)
+    # scatter tokens into [E, C, d]
+    buf = jnp.zeros((E, C, d), x.dtype)
+    upd = jnp.where(keep[:, None], xt[tok], 0).astype(x.dtype)
+    buf = buf.at[flat_e, jnp.where(keep, ppos, C - 1)].add(
+        jnp.where(keep[:, None], upd, 0))
+    from repro.distributed.sharding import constrain_moe
+    buf = constrain_moe(buf)
+    # calibration hooks (eager only): expert inputs + routing statistics
+    ecounts = jnp.zeros((E,), jnp.int32).at[flat_e].add(keep.astype(jnp.int32))
+    compressed.record(p["wg"], buf, ecounts)
+    compressed.record(p["wi"], buf, ecounts)
+    compressed.record_routing(p["router"], ecounts, pmean)
+    # expert FFN on [E, C, d] (dispatches on quantized expert stacks)
+    h = jax.nn.silu(compressed.expert_matmul(buf, p["wg"]))
+    h = h * compressed.expert_matmul(buf, p["wi"])
+    from repro.distributed.sharding import constrain_moe as _cm
+    h = _cm(h)
+    compressed.record(p["wo"], h, ecounts)
+    yb = compressed.expert_matmul(h, p["wo"])
+    # gather back and weight by gates
+    gath = yb[flat_e, jnp.where(keep, ppos, 0)]                    # [T*k, d]
+    gath = jnp.where(keep[:, None], gath, 0)
+    gflat = gates.reshape(-1)[:, None].astype(x.dtype)
+    out = jnp.zeros((T, d), x.dtype).at[tok].add(gath * gflat)
+    return out.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg, dtype):
+    p = {"embed": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model),
+                                     jnp.float32) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["unembed"] = dense_init(k2, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def embed(params, cfg, tokens):
+    t = params["embed"]
+    x = t.lookup(tokens) if isinstance(t, compressed.QEmbed) else t[tokens]
+    if cfg.emb_scale:
+        x = (x.astype(jnp.float32) * math.sqrt(cfg.d_model)).astype(x.dtype)
+    return x
+
+
+def unembed(params, cfg, x):
+    if cfg.tie_embeddings:
+        t = params["embed"]
+        if isinstance(t, compressed.QEmbed):
+            logits = t.logits(x)
+        else:
+            logits = jnp.einsum("...d,vd->...v", x, t,
+                                preferred_element_type=jnp.float32)
+    else:
+        logits = matmul(x, params["unembed"]).astype(jnp.float32)
+    return softcap(logits, cfg.final_softcap)

@@ -1,0 +1,154 @@
+"""Mamba2 (SSD) block — scalar-per-head decay state-space layer.
+
+    h_t = a_t h_{t-1} + dt_t * x_t (x) B_t        a_t = exp(-dt_t e^{A_h})
+    y_t = C_t . h_t + D_h x_t
+
+Chunked parallel form: with scalar per-head decay the pairwise factor
+exp(la_i - la_j) <= 1 is a [C, C] matrix per head — exactly computable
+and MXU-friendly (matmul with B/C/x), unlike RWKV6's per-channel case.
+Decode carries h exactly (O(1) state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import matmul
+
+Params = Dict[str, Any]
+
+
+def dims(cfg):
+    d_inner = cfg.expand * cfg.d_model
+    H = d_inner // cfg.ssd_head_dim
+    return d_inner, H, cfg.ssd_head_dim, cfg.d_state
+
+
+def init_layer(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    d_inner, H, P, N = dims(cfg)
+    conv_ch = d_inner + 2 * N
+    ks = jax.random.split(key, 6)
+    depth_scale = 1.0 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "ln": L.norm_init(d, dtype, cfg.norm_type),
+        "in_proj": L.dense_init(ks[0], d, 2 * d_inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, conv_ch))
+                   * (1.0 / math.sqrt(cfg.conv_kernel))).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))))).astype(jnp.float32),
+        "norm_y": {"w": jnp.ones((d_inner,), dtype)},
+        "out_proj": L.dense_init(ks[3], d_inner, d, dtype, scale=depth_scale),
+    }
+
+
+def init_layer_state(cfg, batch: int, dtype):
+    d_inner, H, P, N = dims(cfg)
+    conv_ch = d_inner + 2 * N
+    return {"h": jnp.zeros((batch, H, P, N), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_ch), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_sequential(x, dt, a, Bm, Cm, D, h0):
+    """Oracle.  x: [B,T,H,P]; dt,a: [B,T,H]; Bm,Cm: [B,T,N]; D: [H];
+    h0: [B,H,P,N] -> (y [B,T,H,P], h_T)."""
+    def step(h, xs):
+        xt, dtt, at, bt, ct = xs
+        upd = (dtt[..., None, None] * xt[..., None]) * bt[:, None, None, :]
+        h = at[..., None, None] * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, ct) + D[None, :, None] * xt
+        return h, y
+
+    xs = tuple(jnp.moveaxis(v, 1, 0).astype(jnp.float32)
+               for v in (x, dt, a, Bm, Cm))
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def ssd_chunked(x, dt, a, Bm, Cm, D, h0, chunk: int = 64):
+    """Chunked parallel SSD (same semantics as ssd_sequential)."""
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    C = min(chunk, T)
+    while T % C:
+        C -= 1
+    nc = T // C
+    f32 = jnp.float32
+    mv = lambda v: jnp.moveaxis(v.reshape(B, nc, C, *v.shape[2:]), 1, 0).astype(f32)
+    xs_, dts, as_, bs, cs = mv(x), mv(dt), mv(a), mv(Bm), mv(Cm)
+
+    def chunk_step(h, xs):
+        xc, dtc, ac, bc, cc = xs                      # [B,C,H,P] / [B,C,H] / [B,C,N]
+        la = jnp.cumsum(jnp.maximum(jnp.log(jnp.maximum(ac, 1e-30)), -60.0),
+                        axis=1)                                     # [B,C,H]
+        # inter: state from previous chunks
+        y = jnp.einsum("bcn,bhpn->bchp", cc, h) * jnp.exp(la)[..., None]
+        # intra: causal pairwise within chunk (j <= i)
+        scores = jnp.einsum("bin,bjn->bij", cc, bc)                # [B,C,C]
+        ladiff = la[:, :, None] - la[:, None, :]                   # [B,C,C,H]
+        mask = jnp.tril(jnp.ones((C, C), bool))
+        A = scores[..., None] * jnp.exp(jnp.minimum(ladiff, 0.0)) \
+            * dtc[:, None, :, :]
+        A = jnp.where(mask[None, :, :, None], A, 0.0)              # [B,C,C,H]
+        y = y + jnp.einsum("bijh,bjhp->bihp", A, xc)
+        y = y + D[None, None, :, None] * xc
+        # state update
+        dec = jnp.exp(la[:, -1][:, None] - la)                     # [B,C,H]
+        upd = jnp.einsum("bchp,bcn->bhpn", xc * (dtc * dec)[..., None], bc)
+        h = jnp.exp(la[:, -1])[..., None, None] * h + upd
+        return h, y
+
+    h, ys = jax.lax.scan(chunk_step, h0.astype(f32), (xs_, dts, as_, bs, cs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, P)
+    return y, h
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+def _conv1d(x, w, b, conv_state):
+    """Causal depthwise conv.  x: [B,T,ch]; w: [K,ch]; conv_state: [B,K-1,ch]."""
+    K = w.shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    new_state = xp[:, xp.shape[1] - (K - 1):]
+    return out + b[None, None], new_state
+
+
+def block_apply(p, x, cfg, *, state=None, chunk: int = 64):
+    """One Mamba2 block with residual.  x: [B,T,d]."""
+    B, T, d = x.shape
+    d_inner, H, P, N = dims(cfg)
+    if state is None:
+        state = init_layer_state(cfg, B, x.dtype)
+    h_in = L.norm(x, p["ln"], cfg)
+    proj = matmul(h_in, p["in_proj"])
+    z, xbc, dt_raw = jnp.split(proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    xbc, conv_state = _conv1d(xbc, p["conv_w"], p["conv_b"], state["conv"])
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None])
+    a = jnp.exp(-dt * jnp.exp(p["A_log"])[None, None])
+    xh = xs.reshape(B, T, H, P)
+    if T == 1:
+        y, h_new = ssd_sequential(xh, dt, a, Bm, Cm, p["D"], state["h"])
+    else:
+        y, h_new = ssd_chunked(xh, dt, a, Bm, Cm, p["D"], state["h"], chunk=chunk)
+    y = y.reshape(B, T, d_inner)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = L.rmsnorm(y, p["norm_y"])
+    out = matmul(y, p["out_proj"])
+    return x + out, {"h": h_new, "conv": conv_state}

@@ -1,0 +1,282 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent per-channel decay.
+
+WKV6 recurrence per head (state S in R^{N x N}, N = head dim):
+
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    o_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t)
+
+Prefill/train use a *chunked* parallel form: within a chunk the pairwise
+decay factor exp(lb_i - la_j) is computed directly in log space (stable
+for arbitrarily strong decays — the factored matmul form overflows when
+per-channel decay is strong; see tests/test_rwkv.py), while chunk-to-chunk
+state is carried through ``lax.scan``.  Decode carries S exactly, giving
+O(1) state — this is why rwkv6 runs the ``long_500k`` cell natively.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.layers import matmul
+
+Params = Dict[str, Any]
+
+_LORA = 64  # decay LoRA bottleneck
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    depth_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    return {
+        "ln1": L.norm_init(d, dtype, cfg.norm_type),
+        "ln2": L.norm_init(d, dtype, cfg.norm_type),
+        "tm": {
+            # static lerp mixes for r,k,v,g + decay base mix
+            "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(dtype),
+            "wr": L.dense_init(ks[1], d, d, dtype),
+            "wk": L.dense_init(ks[2], d, d, dtype),
+            "wv": L.dense_init(ks[3], d, d, dtype),
+            "wg": L.dense_init(ks[4], d, d, dtype),
+            "wo": L.dense_init(ks[5], d, d, dtype, scale=depth_scale),
+            # data-dependent decay: w = exp(-exp(w0 + tanh(x A1) A2))
+            "w0": (jax.random.normal(ks[6], (d,)) * 0.5 - 0.6).astype(jnp.float32),
+            "wa1": L.dense_init(ks[7], d, _LORA, dtype),
+            "wa2": L.dense_init(ks[8], _LORA, d, dtype, scale=0.1),
+            "u": (jax.random.normal(ks[9], (d,)) * 0.3).astype(jnp.float32),
+            "gn": {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)},
+        },
+        "cm": {
+            "mu": (jax.random.uniform(ks[10], (2, d)) * 0.5 + 0.25).astype(dtype),
+            "wk": L.dense_init(ks[11], d, cfg.d_ff, dtype),
+            "wv": L.dense_init(jax.random.fold_in(key, 20), cfg.d_ff, d, dtype,
+                               scale=depth_scale),
+            "wr": L.dense_init(jax.random.fold_in(key, 21), d, d, dtype),
+        },
+    }
+
+
+def init_params(key, cfg) -> Params:
+    dtype = cfg.dtype
+    k_emb, k_blocks = jax.random.split(key)
+    params = L.init_embed(k_emb, cfg, dtype)
+    params["blocks"] = [jax.vmap(lambda k: init_layer(k, cfg, dtype))(
+        jax.random.split(k_blocks, cfg.n_layers))]
+    params["tail"] = []
+    params["ln_f"] = L.norm_init(cfg.d_model, dtype, cfg.norm_type)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# WKV6 core
+# ---------------------------------------------------------------------------
+
+def wkv6_sequential(r, k, v, w, u, S0):
+    """Oracle: token-by-token recurrence.
+
+    r,k,v,w: [B,T,H,N]; u: [H,N]; S0: [B,H,N,N] -> (out [B,T,H,N], S_T).
+    """
+    def step(S, xs):
+        rt, kt, vt, wt = xs                                    # [B,H,N]
+        kv = kt[..., :, None] * vt[..., None, :]               # [B,H,N,N]
+        out = jnp.einsum("bhn,bhnm->bhm", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0).astype(jnp.float32) for a in (r, k, v, w))
+    S, outs = jax.lax.scan(step, S0.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 1), S
+
+
+def wkv6_chunked(r, k, v, w, u, S0, chunk: int = 32):
+    """Chunked parallel WKV6.  Same signature/semantics as sequential."""
+    B, T, H, N = r.shape
+    C = min(chunk, T)
+    while T % C:
+        C -= 1
+    nc = T // C
+    f32 = jnp.float32
+    rs, ks, vs, ws = (jnp.moveaxis(a.reshape(B, nc, C, H, N), 1, 0).astype(f32)
+                      for a in (r, k, v, w))
+
+    def chunk_step(S, xs):
+        rc, kc, vc, wc = xs                                    # [B,C,H,N]
+        # 1e-38 is subnormal and may flush to zero on some backends; clamp
+        # the log itself (decays below e^-60 per token are numerically dead)
+        logw = jnp.maximum(jnp.log(jnp.maximum(wc, 1e-30)), -60.0)
+        la = jnp.cumsum(logw, axis=1)                          # inclusive [B,C,H,N]
+        lb = la - logw                                         # exclusive
+        # inter-chunk: r_i decayed to chunk start, applied to carried state
+        out = jnp.einsum("bchn,bhnm->bchm", rc * jnp.exp(lb), S)
+        # intra-chunk: per-pair log-space decay (stable for strong decay)
+        E = lb[:, :, None] - la[:, None, :]                    # [B,C,C,H,N]
+        A = jnp.einsum("bihn,bjhn,bijhn->bhij", rc, kc,
+                       jnp.exp(jnp.minimum(E, 0.0)))
+        mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        A = jnp.where(mask[None, None], A, 0.0)
+        diag = jnp.einsum("bchn,bchn,hn->bch", rc, kc, u)
+        out = out + jnp.einsum("bhij,bjhn->bihn", A, vc) \
+            + diag[..., None] * vc
+        # state to next chunk
+        decay_to_end = jnp.exp(la[:, -1][:, None] - la)        # [B,C,H,N]
+        S = jnp.exp(la[:, -1])[..., None] * S \
+            + jnp.einsum("bchn,bchm->bhnm", kc * decay_to_end, vc)
+        return S, out
+
+    S, outs = jax.lax.scan(chunk_step, S0.astype(f32), (rs, ks, vs, ws))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, T, H, N)
+    return out, S
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _token_shift(x, prev):
+    """prev: [B,d] carry of last token (zeros initially)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _tm_inputs(p, x, xx):
+    mu = p["mu"].astype(jnp.float32)
+    xf, xxf = x.astype(jnp.float32), xx.astype(jnp.float32)
+    mix = lambda i: (xf + (xxf - xf) * mu[i]).astype(x.dtype)
+    return mix(0), mix(1), mix(2), mix(3), mix(4)   # r,k,v,g,w inputs
+
+
+def time_mix(p, x, cfg, *, shift_prev, S0, chunk: int = 32):
+    """x: [B,T,d] (post-ln).  Returns (out, S_final, new_shift)."""
+    B, T, d = x.shape
+    H, N = cfg.n_heads, cfg.rwkv_head_dim
+    xx = _token_shift(x, shift_prev)
+    xr, xk, xv, xg, xw = _tm_inputs(p, x, xx)
+    r = matmul(xr, p["wr"]).reshape(B, T, H, N)
+    k = matmul(xk, p["wk"]).reshape(B, T, H, N)
+    v = matmul(xv, p["wv"]).reshape(B, T, H, N)
+    g = jax.nn.silu(matmul(xg, p["wg"]))
+    dd = jnp.tanh(matmul(xw, p["wa1"]))
+    dd = matmul(dd, p["wa2"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["w0"][None, None] + dd)).reshape(B, T, H, N)
+    u = p["u"].astype(jnp.float32).reshape(H, N)
+    if T == 1:
+        out, S = wkv6_sequential(r, k, v, w, u, S0)
+    else:
+        out, S = wkv6_chunked(r, k, v, w, u, S0, chunk=chunk)
+    out = out.reshape(B, T, d)
+    # per-head groupnorm
+    oh = out.reshape(B, T, H, N)
+    mu_ = oh.mean(-1, keepdims=True)
+    var = oh.var(-1, keepdims=True)
+    oh = (oh - mu_) * jax.lax.rsqrt(var + 64e-5)
+    out = oh.reshape(B, T, d) * p["gn"]["w"].astype(jnp.float32) \
+        + p["gn"]["b"].astype(jnp.float32)
+    out = (out * g.astype(jnp.float32)).astype(x.dtype)
+    return matmul(out, p["wo"]), S, x[:, -1]
+
+
+def channel_mix(p, x, *, shift_prev):
+    xx = _token_shift(x, shift_prev)
+    mu = p["mu"].astype(jnp.float32)
+    xf, xxf = x.astype(jnp.float32), xx.astype(jnp.float32)
+    xk = (xf + (xxf - xf) * mu[0]).astype(x.dtype)
+    xr = (xf + (xxf - xf) * mu[1]).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(matmul(xk, p["wk"])))
+    out = jax.nn.sigmoid(matmul(xr, p["wr"])) * matmul(kk, p["wv"])
+    return out, x[:, -1]
+
+
+def block_apply(p, x, cfg, *, state=None, chunk: int = 32):
+    """One RWKV layer.  state: {"S","tm_x","cm_x"} or None (zeros)."""
+    B, T, d = x.shape
+    H, N = cfg.n_heads, cfg.rwkv_head_dim
+    if state is None:
+        state = init_layer_state(cfg, B, x.dtype)
+    h = L.norm(x, p["ln1"], cfg)
+    a, S, tm_x = time_mix(p["tm"], h, cfg, shift_prev=state["tm_x"].astype(h.dtype),
+                          S0=state["S"], chunk=chunk)
+    x = x + a
+    h = L.norm(x, p["ln2"], cfg)
+    m, cm_x = channel_mix(p["cm"], h, shift_prev=state["cm_x"].astype(h.dtype))
+    x = x + m
+    return x, {"S": S, "tm_x": tm_x, "cm_x": cm_x}
+
+
+def init_layer_state(cfg, batch: int, dtype=jnp.float32):
+    H, N, d = cfg.n_heads, cfg.rwkv_head_dim, cfg.d_model
+    return {"S": jnp.zeros((batch, H, N, N), jnp.float32),
+            "tm_x": jnp.zeros((batch, d), dtype),
+            "cm_x": jnp.zeros((batch, d), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# model-level API (mirrors transformer.py)
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, cfg, tokens, *, train: bool = False,
+            remat: bool = True, capture: bool = False, **_):
+    x = L.embed(params, cfg, tokens)
+
+    def body(xc, p):
+        cap = (xc,) if capture else ()
+        xc, _ = block_apply(p, xc, cfg)
+        xc = constrain(xc)
+        return xc, (jnp.zeros((), jnp.float32), cap)
+
+    sb = jax.checkpoint(body) if (remat and not capture) else body
+    x, (auxs, caps) = jax.lax.scan(sb, x, params["blocks"][0],
+                                   unroll=cfg.scan_unroll)
+    x = L.norm(x, params["ln_f"], cfg)
+    logits = L.unembed(params, cfg, x)
+    aux = {"moe_aux": jnp.zeros((), jnp.float32)}
+    if capture:
+        aux["captures"] = {"blocks": [caps[0]], "tail": []}
+        aux["final_hidden"] = x
+    return logits, aux
+
+
+def init_cache(cfg, batch: int, max_len: int, **_):
+    """Recurrent state per layer, stacked along the scan axis."""
+    one = init_layer_state(cfg, batch)
+    return {"blocks": [jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)],
+        "tail": []}
+
+
+def decode_step(params: Params, cfg, cache, tokens, pos, *, max_len: int = 0):
+    x = L.embed(params, cfg, tokens)          # [B,1,d]
+
+    def body(xc, xs):
+        p, st = xs
+        xc, st2 = block_apply(p, xc, cfg, state=st)
+        return xc, st2
+
+    x, states = jax.lax.scan(body, x,
+                             (params["blocks"][0], cache["blocks"][0]),
+                             unroll=cfg.scan_unroll)
+    x = L.norm(x, params["ln_f"], cfg)
+    logits = L.unembed(params, cfg, x)
+    return logits, {"blocks": [states], "tail": []}
+
+
+def prefill(params: Params, cfg, tokens, *, max_len: int = 0, **_):
+    x = L.embed(params, cfg, tokens)
+
+    def body(xc, p):
+        xc, st = block_apply(p, xc, cfg)
+        xc = constrain(xc)
+        return xc, st
+
+    x, states = jax.lax.scan(jax.checkpoint(body), x, params["blocks"][0],
+                             unroll=cfg.scan_unroll)
+    x = L.norm(x, params["ln_f"], cfg)
+    logits = L.unembed(params, cfg, x)
+    return logits, {"blocks": [states], "tail": []}

@@ -1,0 +1,216 @@
+"""Query pipeline with LLM-operator interception (the IOLM-DB workflow).
+
+``Query`` is a lazy plan over a Table; when the plan contains an LLM
+operator and instance-optimization is enabled, execution:
+
+  1. draws a **calibration sample** from the operator's actual input
+     column (prompt-formatted — the model sees exactly the query's
+     distribution),
+  2. runs the InstanceOptimizer (calibrate -> recipe search -> Perf/Acc
+     variant per the requested objective),
+  3. executes the operator on an Engine wrapping the compressed model,
+  4. memoizes the compressed model per (query signature, data signature)
+     so repeated/interactive queries skip re-optimization (paper §2
+     "recurring or predictable patterns").
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import InstanceOptimizer, Recipe
+from repro.core import policy as POL
+from repro.olap import operators as OPS
+from repro.olap.table import Table
+from repro.serving.engine import Engine
+from repro.training.data import ByteTokenizer, PROMPTS
+
+
+@dataclass
+class OptimizedModel:
+    params: Any
+    cfg: Any
+    report: Any
+    recipe: Recipe
+    version: str
+
+
+class ModelCache:
+    """(query signature, data signature) -> compressed model."""
+
+    def __init__(self):
+        self._d: Dict[Tuple[str, str], OptimizedModel] = {}
+        self.hits = 0
+
+    @staticmethod
+    def data_signature(values: List[str], k: int = 64) -> str:
+        h = hashlib.sha256()
+        for v in values[:k]:
+            h.update(str(v)[:128].encode())
+        return h.hexdigest()[:16]
+
+    def get(self, qsig: str, dsig: str) -> Optional[OptimizedModel]:
+        m = self._d.get((qsig, dsig))
+        if m is not None:
+            self.hits += 1
+        return m
+
+    def put(self, qsig: str, dsig: str, m: OptimizedModel) -> None:
+        self._d[(qsig, dsig)] = m
+
+
+class IOLMSession:
+    """Holds the base model + optimization machinery across queries."""
+
+    def __init__(self, params, cfg, *, tokenizer: Optional[ByteTokenizer] = None,
+                 objective: str = "perf", acc_floor: float = 0.9,
+                 recipes: Optional[List[Recipe]] = None,
+                 calib_rows: int = 16, eval_rows: int = 8,
+                 engine_kw: Optional[Dict] = None):
+        self.params = params
+        self.cfg = cfg
+        self.tok = tokenizer or ByteTokenizer(max(cfg.vocab_size, 260))
+        self.objective = objective
+        self.acc_floor = acc_floor
+        self.recipes = recipes
+        self.calib_rows = calib_rows
+        self.eval_rows = eval_rows
+        self.model_cache = ModelCache()
+        self.engine_kw = engine_kw or {}
+        self.log: List[str] = []
+
+    # -- engines --------------------------------------------------------
+    def base_engine(self) -> Engine:
+        return Engine(self.params, self.cfg, tokenizer=self.tok,
+                      version="base", **self.engine_kw)
+
+    def optimized_engine(self, qsig: str, prompts: List[str]) -> Engine:
+        m = self._optimize(qsig, prompts)
+        return Engine(m.params, m.cfg, tokenizer=self.tok,
+                      version=m.version, **self.engine_kw)
+
+    # -- the instance-optimization workflow ------------------------------
+    def _optimize(self, qsig: str, prompts: List[str]) -> OptimizedModel:
+        dsig = ModelCache.data_signature(prompts)
+        cached = self.model_cache.get(qsig, dsig)
+        if cached is not None:
+            self.log.append(f"[iolm] model cache hit for {qsig}")
+            return cached
+        t0 = time.time()
+        sample = prompts[: self.calib_rows]
+        toks, _ = self.tok.pad_batch(
+            [self.tok.encode(p, bos=True) for p in sample],
+            seq_len=max(16, max(len(p) + 2 for p in sample)))
+        batch = {"tokens": jnp.asarray(toks)}
+        opt = InstanceOptimizer(self.params, self.cfg)
+        opt.run_calibration(batch)
+        recipes = self.recipes or POL.default_recipe_space(self.cfg)
+        hold = prompts[self.calib_rows:
+                       self.calib_rows + self.eval_rows] or sample
+        htoks, hlens = self.tok.pad_batch(
+            [self.tok.encode(p, bos=True) + [self.tok.SEP] for p in hold],
+            seq_len=max(16, max(len(p) + 3 for p in hold)))
+        eval_fn = POL.make_agreement_eval(self.params, self.cfg,
+                                          jnp.asarray(htoks), max_new=12,
+                                          lengths=jnp.asarray(hlens))
+        outcome = POL.search(opt, eval_fn, recipes,
+                             acc_floor=self.acc_floor, keep_params=True)
+        pick = outcome.perf if self.objective == "perf" else outcome.acc
+        if pick is None:  # nothing survived: identity model
+            m = OptimizedModel(self.params, self.cfg, None,
+                               Recipe(name="identity"), "base")
+        else:
+            m = OptimizedModel(pick.params, pick.cfg, pick.report,
+                               pick.recipe,
+                               f"{qsig}:{pick.recipe.name}")
+            self.log.append(
+                f"[iolm] {qsig}: picked {pick.recipe.name} "
+                f"acc={pick.result.accuracy:.2f} "
+                f"{pick.result.bytes / 1e6:.1f}MB "
+                f"({time.time() - t0:.1f}s to optimize)")
+        self.model_cache.put(qsig, dsig, m)
+        return m
+
+
+# ---------------------------------------------------------------------------
+# lazy query plan
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Op:
+    kind: str
+    kwargs: Dict
+
+
+class Query:
+    def __init__(self, table: Table, session: IOLMSession, *,
+                 optimize: bool = True):
+        self.table = table
+        self.session = session
+        self.optimize = optimize
+        self._plan: List[_Op] = []
+
+    def llm_map(self, col: str, *, prompt: str = PROMPTS["summarize"],
+                out_col: str = "summary", max_new: int = 24) -> "Query":
+        self._plan.append(_Op("map", dict(col=col, prompt=prompt,
+                                          out_col=out_col, max_new=max_new)))
+        return self
+
+    def llm_correct(self, col: str, *, prompt: str = PROMPTS["correct"],
+                    out_col: Optional[str] = None,
+                    max_new: int = 16) -> "Query":
+        self._plan.append(_Op("correct", dict(col=col, prompt=prompt,
+                                              out_col=out_col,
+                                              max_new=max_new)))
+        return self
+
+    def llm_join(self, right: Table, on: Tuple[str, str], *,
+                 prompt: str = PROMPTS["join"], max_new: int = 12) -> "Query":
+        self._plan.append(_Op("join", dict(right=right, on=on, prompt=prompt,
+                                           max_new=max_new)))
+        return self
+
+    def filter(self, pred: Callable) -> "Query":
+        self._plan.append(_Op("filter", dict(pred=pred)))
+        return self
+
+    def _qsig(self, op: _Op) -> str:
+        base = f"{op.kind}:{op.kwargs.get('prompt', '')}"
+        return hashlib.sha256(base.encode()).hexdigest()[:12]
+
+    def run(self) -> Table:
+        t = self.table
+        for op in self._plan:
+            if op.kind == "filter":
+                t = t.filter(op.kwargs["pred"])
+                continue
+            # --- LLM operator interception ---
+            if op.kind == "join":
+                probe = [f"{op.kwargs['prompt']}{a} | {b}"
+                         for a in t[op.kwargs["on"][0]][:32]
+                         for b in op.kwargs["right"][op.kwargs["on"][1]][:2]]
+            else:
+                probe = [op.kwargs["prompt"] + str(v)
+                         for v in t[op.kwargs["col"]]]
+            engine = (self.session.optimized_engine(self._qsig(op), probe)
+                      if self.optimize else self.session.base_engine())
+            if op.kind == "map":
+                t = OPS.llm_map(t, op.kwargs["col"], engine,
+                                prompt=op.kwargs["prompt"],
+                                out_col=op.kwargs["out_col"],
+                                max_new=op.kwargs["max_new"])
+            elif op.kind == "correct":
+                t = OPS.llm_correct(t, op.kwargs["col"], engine,
+                                    prompt=op.kwargs["prompt"],
+                                    out_col=op.kwargs["out_col"],
+                                    max_new=op.kwargs["max_new"])
+            elif op.kind == "join":
+                t = OPS.llm_join(t, op.kwargs["right"], op.kwargs["on"],
+                                 engine, prompt=op.kwargs["prompt"],
+                                 max_new=op.kwargs["max_new"])
+        return t

@@ -1,0 +1,58 @@
+"""Minimal columnar table (the pandas stand-in of the prototype)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+
+class Table:
+    def __init__(self, columns: Dict[str, List[Any]]):
+        lens = {len(v) for v in columns.values()}
+        assert len(lens) <= 1, "ragged columns"
+        self.columns = dict(columns)
+
+    @classmethod
+    def from_rows(cls, rows: Sequence[Dict[str, Any]]) -> "Table":
+        cols: Dict[str, List[Any]] = {}
+        for r in rows:
+            for k, v in r.items():
+                cols.setdefault(k, []).append(v)
+        return cls(cols)
+
+    def __len__(self) -> int:
+        return len(next(iter(self.columns.values()), []))
+
+    def __getitem__(self, col: str) -> List[Any]:
+        return self.columns[col]
+
+    def with_column(self, name: str, values: List[Any]) -> "Table":
+        assert len(values) == len(self)
+        out = dict(self.columns)
+        out[name] = list(values)
+        return Table(out)
+
+    def select(self, cols: Sequence[str]) -> "Table":
+        return Table({c: self.columns[c] for c in cols})
+
+    def filter(self, pred: Callable[[Dict[str, Any]], bool]) -> "Table":
+        keep = [i for i in range(len(self)) if pred(self.row(i))]
+        return Table({k: [v[i] for i in keep]
+                      for k, v in self.columns.items()})
+
+    def row(self, i: int) -> Dict[str, Any]:
+        return {k: v[i] for k, v in self.columns.items()}
+
+    def rows(self) -> List[Dict[str, Any]]:
+        return [self.row(i) for i in range(len(self))]
+
+    def head(self, n: int = 5) -> "Table":
+        return Table({k: v[:n] for k, v in self.columns.items()})
+
+    def __repr__(self) -> str:
+        cols = list(self.columns)
+        lines = [" | ".join(cols)]
+        for i in range(min(len(self), 8)):
+            lines.append(" | ".join(str(self.columns[c][i])[:32]
+                                    for c in cols))
+        if len(self) > 8:
+            lines.append(f"... ({len(self)} rows)")
+        return "\n".join(lines)

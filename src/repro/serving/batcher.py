@@ -1,0 +1,59 @@
+"""Request batching (paper §3.3): group rows to amortize invocation cost.
+
+Buckets prompts by padded length (powers of two between min and max) so
+the jit cache holds one prefill executable per bucket instead of one per
+distinct length.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt_ids: List[int]
+    max_new: int
+    # filled during serving
+    out_ids: List[int] = field(default_factory=list)
+    done: bool = False
+    cache_key: Optional[tuple] = None
+
+
+def bucket_len(n: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class Batcher:
+    """FIFO admission with length-bucketing."""
+
+    def __init__(self, buckets: Sequence[int] = (32, 64, 128, 256, 512)):
+        self.buckets = tuple(sorted(buckets))
+        self.queue: List[Request] = []
+
+    def add(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def take(self, n: int) -> List[Request]:
+        """Up to n requests sharing one length bucket (FIFO head defines
+        the bucket so no request starves)."""
+        if not self.queue or n <= 0:
+            return []
+        head_b = bucket_len(len(self.queue[0].prompt_ids), self.buckets)
+        out, rest = [], []
+        for r in self.queue:
+            if len(out) < n and bucket_len(len(r.prompt_ids),
+                                           self.buckets) == head_b:
+                out.append(r)
+            else:
+                rest.append(r)
+        self.queue = rest
+        return out
+
+    def __len__(self) -> int:
+        return len(self.queue)

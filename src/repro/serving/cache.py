@@ -1,0 +1,45 @@
+"""Result cache (paper §3.3): exact-match memoization of LLM outputs.
+
+OLAP columns are full of duplicates (categories, enums, repeated
+entities); identical (prompt, params-version) pairs short-circuit the
+model entirely.  LRU with hit accounting — the cache-hit rate is one of
+the Table-1-adjacent numbers benchmarks report.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+
+class ResultCache:
+    def __init__(self, capacity: int = 65536):
+        self.capacity = capacity
+        self._d: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def key(self, prompt: str, max_new: int, version: str = "") -> Tuple:
+        return (prompt, max_new, version)
+
+    def get(self, key) -> Optional[str]:
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def put(self, key, value: str) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        if len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def clear(self) -> None:
+        self._d.clear()
+        self.hits = self.misses = 0

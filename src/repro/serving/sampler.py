@@ -1,0 +1,21 @@
+"""Token sampling: greedy / temperature / top-k (f32 logits)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, key, *, temperature: float = 0.0,
+           top_k: int = 0) -> jax.Array:
+    if temperature <= 0.0:
+        return greedy(logits)
+    lf = logits.astype(jnp.float32) / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(lf, top_k)
+        kth = vals[..., -1:]
+        lf = jnp.where(lf < kth, -1e30, lf)
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)

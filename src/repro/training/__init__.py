@@ -1,0 +1,2 @@
+"""Training substrate: optimizers, loop, checkpointing, grad compression,
+synthetic data pipeline."""

@@ -1,0 +1,135 @@
+"""Sharded optimizers: AdamW and Adafactor, functional style.
+
+States are pytrees mirroring the params, so the same PartitionSpec rules
+shard them (Adafactor's factored second moment keeps only row/col
+statistics — the memory-frugal choice for the arctic-480b train cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale)
+                        .astype(g.dtype), tree), norm
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]        # (params, grads, state, step)
+    global_norm: Callable[[Any], jax.Array] = global_norm
+
+
+def _warmup_cosine(lr: float, warmup: int, total: int):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip: float = 1.0, warmup: int = 100,
+          total_steps: int = 10000) -> Optimizer:
+    sched = _warmup_cosine(lr, warmup, total_steps)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(params, grads, state, step):
+        grads, _ = clip_by_global_norm(grads, clip)
+        lr_t = sched(step)
+        bc1 = 1.0 - b1 ** (jnp.asarray(step, jnp.float32) + 1)
+        bc2 = 1.0 - b2 ** (jnp.asarray(step, jnp.float32) + 1)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            if p.ndim >= 2:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        params2 = jax.tree.map(lambda t: t[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m2 = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        v2 = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return params2, {"m": m2, "v": v2}
+
+    return Optimizer(init=init, update=update)
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip: float = 1.0, weight_decay: float = 0.0,
+              warmup: int = 100, total_steps: int = 10000) -> Optimizer:
+    """Factored second-moment optimizer (rank-1 v for matrices)."""
+    sched = _warmup_cosine(lr, warmup, total_steps)
+
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(one, params)}
+
+    def update(params, grads, state, step):
+        grads, _ = clip_by_global_norm(grads, clip)
+        lr_t = sched(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+
+        def upd(p, g, s):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = vr[..., :, None] * vc[..., None, :] \
+                    / jnp.maximum(vr.mean(-1)[..., None, None], eps)
+                u = gf * jax.lax.rsqrt(denom + eps)
+                s2 = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(v + eps)
+                s2 = {"v": v}
+            # update clipping (Adafactor RMS rule)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            if p.ndim >= 2 and weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), s2
+
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        gflat = treedef.flatten_up_to(grads)
+        sflat = treedef.flatten_up_to(state["f"])
+        pairs = [upd(p, g, s) for p, g, s in zip(flat, gflat, sflat)]
+        params2 = treedef.unflatten([a for a, _ in pairs])
+        state2 = {"f": treedef.unflatten([b for _, b in pairs])}
+        return params2, state2
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,50 @@
+import os
+
+# keep tests on 1 CPU device (the dry-run sets its own 512-device flag in a
+# subprocess); cap compilation parallelism for the single-core container.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+import pytest  # noqa: E402
+
+from repro.configs import registry  # noqa: E402
+from repro.models import api  # noqa: E402
+
+
+FAST_ARCHS = ("mistral-nemo-12b", "gemma2-2b", "qwen2-moe-a2.7b",
+              "rwkv6-3b", "zamba2-7b", "whisper-base")
+
+
+@pytest.fixture(scope="session")
+def reduced_models():
+    """One initialized reduced model per arch (shared across tests)."""
+    out = {}
+    key = jax.random.PRNGKey(0)
+    for arch in registry.ARCH_IDS:
+        cfg = registry.get_reduced(arch)
+        out[arch] = (cfg, api.init_params(key, cfg))
+    return out
+
+
+def make_batch(cfg, B=2, S=64, key=1):
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(key), (B, S),
+                                          0, cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(key + 1),
+                                          (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["enc_inputs"] = jax.random.normal(
+            jax.random.PRNGKey(key + 2), (B, cfg.enc_ctx, cfg.d_model),
+            cfg.dtype)
+    if cfg.family == "vlm":
+        n = cfg.n_img_tokens
+        batch["img_embs"] = jax.random.normal(
+            jax.random.PRNGKey(key + 2), (B, n, cfg.d_model), cfg.dtype) * 0.1
+        batch["tokens"] = batch["tokens"][:, : S - n]
+        batch["labels"] = batch["labels"][:, : S - n]
+    return batch

@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantize as Q
+from repro.core import sparsify as S
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _rel(got, want):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    return np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+
+
+class TestQuantMatmul:
+    @pytest.mark.parametrize("M,K,N,g", [
+        (8, 128, 128, 128), (64, 256, 128, 64), (1, 512, 256, 128),
+        (130, 256, 384, 32), (16, 1024, 128, 128),
+    ])
+    def test_shapes(self, M, K, N, g):
+        w = RNG.normal(size=(K, N)).astype(np.float32)
+        qt = Q.absmax_quantize(w, bits=8, group=g)
+        x = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32).astype(
+            jnp.bfloat16)
+        got = ops.quant_matmul(x, qt.q, qt.scale, group=qt.group,
+                               interpret=True)
+        want = ref.quant_matmul(x, qt.q, qt.scale, group=qt.group)
+        assert _rel(got, want) < 2e-2
+
+    @pytest.mark.parametrize("xdtype", [jnp.bfloat16, jnp.float32])
+    def test_dtypes(self, xdtype):
+        w = RNG.normal(size=(256, 128)).astype(np.float32)
+        qt = Q.absmax_quantize(w, bits=8, group=128)
+        x = jnp.asarray(RNG.normal(size=(32, 256))).astype(xdtype)
+        got = ops.quant_matmul(x, qt.q, qt.scale, group=qt.group,
+                               interpret=True)
+        want = ref.quant_matmul(x, qt.q, qt.scale, group=qt.group)
+        assert _rel(got, want) < 2e-2
+        assert got.dtype == xdtype
+
+    def test_batched_input_reshape(self):
+        w = RNG.normal(size=(128, 64)).astype(np.float32)
+        qt = Q.absmax_quantize(w, bits=8, group=64)
+        x = jnp.asarray(RNG.normal(size=(2, 5, 128)), jnp.bfloat16)
+        got = ops.quant_matmul(x, qt.q, qt.scale, group=qt.group,
+                               interpret=True)
+        assert got.shape == (2, 5, 64)
+
+    def test_in_scale_smoothquant(self):
+        w = RNG.normal(size=(256, 128)).astype(np.float32)
+        amax = np.abs(RNG.normal(size=256)).astype(np.float32) + 0.5
+        qt = Q.absmax_quantize(w, bits=8, group=128, amax_x=amax,
+                               smooth_alpha=0.5)
+        assert qt.in_scale is not None
+        x = jnp.asarray(RNG.normal(size=(16, 256)), jnp.bfloat16)
+        got = ops.quant_matmul(x, qt.q, qt.scale, group=qt.group,
+                               in_scale=qt.in_scale, interpret=True)
+        want = ref.quant_matmul(x, qt.q, qt.scale, group=qt.group,
+                                in_scale=qt.in_scale)
+        assert _rel(got, want) < 2e-2
+
+
+class TestBlockSparse:
+    @pytest.mark.parametrize("K,N,bs,dens", [
+        (256, 256, 64, 0.5), (512, 128, 128, 0.75), (128, 256, 32, 0.25),
+    ])
+    def test_skips_match_oracle(self, K, N, bs, dens):
+        w = RNG.normal(size=(K, N)).astype(np.float32)
+        m = S.block_sparse_mask(w, bs=bs, density=dens)
+        bst = S.apply_block_mask(w, m, bs)
+        x = jnp.asarray(RNG.normal(size=(16, K)), jnp.bfloat16)
+        got = ops.block_sparse_matmul(x, bst.w, bst.idx, bs=bs,
+                                      interpret=True)
+        want = ref.block_sparse_matmul(x, bst.w, bst.mask, bs=bs)
+        assert _rel(got, want) < 2e-2
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,S_,T,H,Kh,D,win,cap", [
+        (2, 64, 64, 4, 2, 64, 0, 0.0),      # GQA causal
+        (1, 128, 128, 8, 1, 32, 32, 0.0),   # MQA sliding window
+        (2, 64, 64, 4, 4, 64, 0, 30.0),     # MHA with softcap (gemma2)
+        (1, 64, 192, 2, 2, 32, 0, 0.0),     # cross len (q_offset decode)
+    ])
+    def test_variants(self, B, S_, T, H, Kh, D, win, cap):
+        q = jnp.asarray(RNG.normal(size=(B, S_, H, D)), jnp.bfloat16)
+        k = jnp.asarray(RNG.normal(size=(B, T, Kh, D)), jnp.bfloat16)
+        v = jnp.asarray(RNG.normal(size=(B, T, Kh, D)), jnp.bfloat16)
+        off = T - S_
+        got = ops.flash_attention(q, k, v, causal=True, window=win,
+                                  softcap=cap, q_offset=off, interpret=True)
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, S_, D)
+        kf = k.transpose(0, 2, 1, 3).reshape(B * Kh, T, D)
+        vf = v.transpose(0, 2, 1, 3).reshape(B * Kh, T, D)
+        want = ref.attention(qf, kf, vf, causal=True, window=win,
+                             softcap=cap, q_offset=off)
+        want = want.reshape(B, H, S_, D).transpose(0, 2, 1, 3)
+        assert _rel(got, want) < 2e-2
+
+    def test_matches_model_attention(self):
+        """Kernel agrees with the model's own full_attention path."""
+        from repro.models import layers as L
+        B, S_, H, Kh, D = 2, 64, 4, 2, 32
+        q = jnp.asarray(RNG.normal(size=(B, S_, H, D)), jnp.float32)
+        k = jnp.asarray(RNG.normal(size=(B, S_, Kh, D)), jnp.float32)
+        v = jnp.asarray(RNG.normal(size=(B, S_, Kh, D)), jnp.float32)
+        got = ops.flash_attention(q.astype(jnp.bfloat16),
+                                  k.astype(jnp.bfloat16),
+                                  v.astype(jnp.bfloat16), causal=True,
+                                  interpret=True)
+        want = L.full_attention(q, k, v, causal=True)
+        assert _rel(got, want) < 3e-2
+
+
+class TestKernelDispatch:
+    def test_use_kernels_routes_qtensor(self, monkeypatch):
+        from repro.core import compressed as C
+        w = RNG.normal(size=(128, 64)).astype(np.float32)
+        qt = Q.absmax_quantize(w, bits=8, group=64)
+        x = jnp.asarray(RNG.normal(size=(4, 128)), jnp.bfloat16)
+        base = C.matmul(x, qt)
+        calls = {}
+        import repro.kernels.ops as kops
+        orig = kops.quant_matmul
+        def spy(*a, **k):
+            calls["hit"] = True
+            return orig(*a, interpret=True, **{kk: vv for kk, vv in k.items()
+                                               if kk != "interpret"})
+        monkeypatch.setattr(kops, "quant_matmul", spy)
+        C.use_kernels(True)
+        try:
+            out = C.matmul(x, qt)
+        finally:
+            C.use_kernels(False)
+        assert calls.get("hit")
+        assert _rel(out, base) < 2e-2

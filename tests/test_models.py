@@ -1,0 +1,154 @@
+"""Per-architecture smoke tests (deliverable f) + decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import FAST_ARCHS, make_batch
+from repro.configs import registry
+from repro.configs.base import SHAPES, input_specs, shape_supported
+from repro.models import api
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_smoke_forward_and_train_step(arch, reduced_models):
+    """One forward + one loss/grad step on the reduced config: correct
+    shapes, no NaNs (the assigned-architecture smoke requirement)."""
+    cfg, params = reduced_models[arch]
+    batch = make_batch(cfg)
+    logits, aux = api.forward(params, cfg, batch)
+    B = batch["tokens"].shape[0]
+    S = batch["tokens"].shape[1] + (cfg.n_img_tokens
+                                    if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+    loss, grads = jax.value_and_grad(
+        lambda p: api.loss_fn(p, cfg, batch))(params)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", FAST_ARCHS)
+def test_prefill_decode_matches_forward(arch, reduced_models):
+    """prefill + token-by-token decode == full forward logits."""
+    cfg, params = reduced_models[arch]
+    B, S, T = 2, 24, 32
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, T), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens}
+    full = {"tokens": tokens}
+    if cfg.family == "encdec":
+        enc = jax.random.normal(jax.random.PRNGKey(4),
+                                (B, cfg.enc_ctx, cfg.d_model), cfg.dtype)
+        batch = {"tokens": tokens[:, :S], "enc_inputs": enc}
+        full["enc_inputs"] = enc
+    else:
+        batch = {"tokens": tokens[:, :S]}
+    fl, _ = api.forward(params, cfg, full)
+    _, cache = api.prefill(params, cfg, batch, max_len=T,
+                           compact_local=False)
+    errs = []
+    for t in range(S, T):
+        lg, cache = api.decode_step(params, cfg, cache, tokens[:, t:t + 1],
+                                    jnp.full((B,), t, jnp.int32), max_len=T)
+        errs.append(float(jnp.max(jnp.abs(
+            lg[:, 0].astype(jnp.float32) - fl[:, t].astype(jnp.float32)))))
+    assert max(errs) < 0.15, errs
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_input_specs_cover_all_shapes(arch):
+    """Every supported (arch x shape) cell has well-formed input specs."""
+    cfg = registry.get_config(arch)
+    for shape in SHAPES:
+        ok, reason = shape_supported(cfg, shape)
+        if not ok:
+            assert reason
+            continue
+        specs = input_specs(cfg, shape)
+        assert "tokens" in specs
+        for sds in jax.tree.leaves(specs):
+            assert all(d > 0 for d in sds.shape)
+
+
+def test_long_context_assignment():
+    """long_500k runs exactly for the sub-quadratic/hybrid/local archs."""
+    runs = {a for a in registry.ARCH_IDS
+            if shape_supported(registry.get_config(a), "long_500k")[0]}
+    assert runs == {"gemma3-1b", "rwkv6-3b", "zamba2-7b"}
+
+
+def test_gemma2_softcap_and_pattern():
+    cfg = registry.get_config("gemma2-2b")
+    assert cfg.attn_softcap > 0 and cfg.final_softcap > 0
+    assert set(cfg.pattern()) == {"L", "G"} and len(cfg.pattern()) == 26
+
+
+def test_param_counts_match_published_scale():
+    """Analytic param counts are in the right ballpark for the configs."""
+    expect = {"mistral-nemo-12b": (11e9, 14e9),
+              "granite-20b": (18e9, 22e9),
+              "gemma2-2b": (2.0e9, 3.3e9),
+              "gemma3-1b": (0.7e9, 1.3e9),
+              "arctic-480b": (430e9, 520e9),
+              "qwen2-moe-a2.7b": (12e9, 16e9),
+              "rwkv6-3b": (2.5e9, 3.5e9),
+              "zamba2-7b": (5.5e9, 9e9)}
+    for arch, (lo, hi) in expect.items():
+        n = registry.get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params_much_smaller():
+    cfg = registry.get_config("arctic-480b")
+    assert cfg.active_param_count() < 0.1 * cfg.param_count()
+
+
+def test_rwkv_chunked_matches_sequential():
+    from repro.models import rwkv as RW
+    B, T, H, N = 2, 33, 3, 8
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, N)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, N)) - 1.0)
+    u = jax.random.normal(jax.random.PRNGKey(9), (H, N)) * 0.3
+    S0 = jnp.zeros((B, H, N, N))
+    o1, s1 = RW.wkv6_sequential(r, k, v, w, u, S0)
+    o2, s2 = RW.wkv6_chunked(r, k, v, w, u, S0, chunk=8)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_chunked_matches_sequential():
+    from repro.models import mamba as M
+    B, T, H, P, N = 2, 37, 2, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    a = jnp.exp(-dt * jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3))
+    Bm = jax.random.normal(ks[3], (B, T, N))
+    Cm = jax.random.normal(ks[4], (B, T, N))
+    D = jnp.ones((H,))
+    h0 = jnp.zeros((B, H, P, N))
+    y1, h1 = M.ssd_sequential(x, dt, a, Bm, Cm, D, h0)
+    y2, h2 = M.ssd_chunked(x, dt, a, Bm, Cm, D, h0, chunk=8)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_local_block_attention_matches_masked_full():
+    from repro.models import layers as L
+    B, S, H, K, Dh, W = 1, 64, 4, 2, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, Dh), jnp.float32)
+    got = L.local_block_attention(q, k, v, window=W)
+    want = L.full_attention(q, k, v, causal=True, window=W)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)

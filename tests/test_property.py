@@ -1,0 +1,111 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize as Q
+from repro.core import sparsify as S
+from repro.core.compressed import pack_int4, QTensor
+from repro.serving.cache import ResultCache
+from repro.serving.batcher import Batcher, Request, bucket_len
+from repro.training.data import ByteTokenizer
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(k=st.integers(1, 8), n=st.integers(1, 8),
+       g=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_absmax_quant_error_bounded(k, n, g, seed):
+    """|W - dequant(quant(W))| <= scale/2 element-wise, any shape/group."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(k * g, n * 8)).astype(np.float32) * rng.uniform(
+        0.1, 10)
+    qt = Q.absmax_quantize(w, bits=8, group=g)
+    wd = np.asarray(qt.dequantize(), np.float32)
+    bound = np.asarray(qt.scale).repeat(g, 0) * 0.5 + 0.02 * np.abs(w) + 1e-4
+    assert np.all(np.abs(w - wd) <= bound)
+
+
+@given(rows=st.integers(1, 16), cols=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_int4_pack_unpack_roundtrip(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(-8, 8, size=(rows * 2, cols)).astype(np.int8)
+    qt = QTensor(pack_int4(jnp.asarray(codes)),
+                 jnp.ones((1, cols), jnp.float32), 4, rows * 2,
+                 (rows * 2, cols))
+    np.testing.assert_array_equal(np.asarray(qt.unpack()), codes)
+
+
+@given(n=st.integers(1, 3), m=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_nm_mask_exact_structure(n, m, seed):
+    if n > m:
+        return
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(m * 8, 16)).astype(np.float32)
+    act = np.abs(rng.normal(size=m * 8)).astype(np.float32) + 0.1
+    mask = S.wanda_mask(w, act, n=n, m=m)
+    groups = mask.reshape(-1, m, 16).sum(1)
+    assert (groups == n).all()
+
+
+@given(dens=st.floats(0.1, 1.0), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_block_mask_uniform_per_column(dens, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(128, 64)).astype(np.float32)
+    mask = S.block_sparse_mask(w, bs=16, density=dens)
+    counts = mask.sum(0)
+    assert (counts == counts[0]).all()
+    assert 1 <= counts[0] <= 8
+
+
+@given(text=st.text(max_size=64))
+@settings(**SETTINGS)
+def test_tokenizer_roundtrip(text):
+    tok = ByteTokenizer()
+    assert tok.decode(tok.encode(text)) == text
+
+
+@given(keys=st.lists(st.text(min_size=1, max_size=8), min_size=1,
+                     max_size=40))
+@settings(**SETTINGS)
+def test_result_cache_lru_bounded(keys):
+    c = ResultCache(capacity=8)
+    for k in keys:
+        kk = c.key(k, 4)
+        if c.get(kk) is None:
+            c.put(kk, "v" + k)
+    assert len(c._d) <= 8
+    # most recent key always retrievable
+    kk = c.key(keys[-1], 4)
+    assert c.get(kk) == "v" + keys[-1]
+
+
+@given(lens=st.lists(st.integers(1, 300), min_size=1, max_size=20))
+@settings(**SETTINGS)
+def test_batcher_buckets_and_fifo(lens):
+    b = Batcher(buckets=(32, 64, 128, 256))
+    for i, ln in enumerate(lens):
+        b.add(Request(rid=i, prompt_ids=list(range(ln)), max_new=4))
+    head = b.queue[0]
+    got = b.take(4)
+    assert got and got[0].rid == head.rid          # FIFO head served
+    bk = bucket_len(len(head.prompt_ids), b.buckets)
+    assert all(bucket_len(len(r.prompt_ids), b.buckets) == bk for r in got)
+    assert len(got) + len(b) == len(lens)
+
+
+@given(seed=st.integers(0, 2**31 - 1), sparsity=st.floats(0.1, 0.9))
+@settings(max_examples=10, deadline=None)
+def test_sparsegpt_respects_target_sparsity(seed, sparsity):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(64, 32)).astype(np.float32)
+    X = rng.normal(size=(256, 64))
+    H = X.T @ X
+    _, mask = S.sparsegpt_prune(w, H, sparsity=sparsity, blocksize=32)
+    assert abs((~mask).mean() - sparsity) < 0.1

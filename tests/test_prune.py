@@ -1,0 +1,91 @@
+"""Structural pruning: shapes, config updates, stats re-slicing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.configs import registry
+from repro.core import prune as P
+from repro.core.calibrate import calibrate
+from repro.models import api
+
+
+def _calib(arch, reduced_models, B=2, S=48):
+    cfg, params = reduced_models[arch]
+    batch = make_batch(cfg, B=B, S=S)
+    return cfg, params, batch, calibrate(params, cfg, batch)
+
+
+def test_kv_group_prune(reduced_models):
+    cfg, params, batch, stats = _calib("mistral-nemo-12b", reduced_models)
+    p2, c2, st2 = P.prune_kv_groups(params, cfg, stats, keep=2)
+    assert c2.n_kv_heads == 2
+    assert c2.n_heads == 2 * (cfg.n_heads // cfg.n_kv_heads)
+    # head_dim must be pinned (n_heads change would alter d_model//n_heads)
+    assert c2.resolved_head_dim == cfg.resolved_head_dim
+    logits, _ = api.forward(p2, c2, batch)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+    # stats for wo re-sliced to the kept channels
+    k = sorted(k for k in st2.weights if k.endswith("attn.wo"))[0]
+    hd = c2.resolved_head_dim
+    assert st2.weights[k].H.shape[0] == c2.n_heads * hd
+
+
+def test_ffn_prune_all_families(reduced_models):
+    for arch in ("mistral-nemo-12b", "qwen2-moe-a2.7b", "rwkv6-3b",
+                 "zamba2-7b", "whisper-base"):
+        cfg, params, batch, stats = _calib(arch, reduced_models)
+        p2, c2, _ = P.prune_ffn(params, cfg, stats, keep_frac=0.75)
+        logits, _ = api.forward(p2, c2, batch)
+        assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32)))), arch
+
+
+def test_layer_drop_scores_pick_most_redundant(reduced_models):
+    cfg, params, batch, stats = _calib("mistral-nemo-12b", reduced_models)
+    R = cfg.n_layers
+    p2, c2, _ = P.drop_layers(params, cfg, stats, 1)
+    assert c2.n_layers == R - 1
+    logits, _ = api.forward(p2, c2, batch)
+    assert logits.shape[-1] == cfg.vocab_size
+
+
+def test_expert_prune_uses_routing_stats(reduced_models):
+    cfg, params, batch, stats = _calib("qwen2-moe-a2.7b", reduced_models)
+    key = sorted(k for k in stats.weights if k.endswith("moe.router"))[0]
+    assert stats.weights[key].route_count is not None
+    p2, c2, _ = P.prune_experts(params, cfg, stats, keep_e=4)
+    assert c2.n_experts == 4
+    logits, _ = api.forward(p2, c2, batch)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+
+def test_expert_prune_keeps_most_routed(reduced_models):
+    """Experts kept must be the top-routed ones from calibration."""
+    cfg, params, batch, stats = _calib("qwen2-moe-a2.7b", reduced_models)
+    key = sorted(k for k in stats.weights if k.endswith("moe.router"))[0]
+    counts = stats.weights[key].route_count.copy()
+    p2, c2, st2 = P.prune_experts(params, cfg, stats, keep_e=3)
+    kept_counts = st2.weights[key].route_count
+    # kept experts are the 3 largest original counts
+    assert set(np.sort(kept_counts)) <= set(np.sort(counts)[-4:])
+
+
+def test_prune_composes_with_decode(reduced_models):
+    cfg, params, batch, stats = _calib("gemma2-2b", reduced_models)
+    p2, c2, st2 = P.drop_layers(params, cfg, stats, 2)
+    p2, c2, st2 = P.prune_ffn(p2, c2, st2, 0.5)
+    cache = api.init_cache(c2, 2, 64)
+    lg, cache = api.decode_step(p2, c2, cache, batch["tokens"][:, :1],
+                                jnp.zeros((2,), jnp.int32), max_len=64)
+    assert not bool(jnp.any(jnp.isnan(lg.astype(jnp.float32))))
+    assert len(c2.pattern()) == c2.n_layers
+
+
+def test_rwkv_head_prune_is_noop(reduced_models):
+    """Attention-head pruning is inapplicable to rwkv (DESIGN.md
+    §Arch-applicability) — must be an identity, not an error."""
+    cfg, params, batch, stats = _calib("rwkv6-3b", reduced_models)
+    p2, c2, _ = P.prune_kv_groups(params, cfg, stats, keep=1)
+    assert c2.n_kv_heads == cfg.n_kv_heads
+    assert jax.tree.structure(p2) == jax.tree.structure(params)
