@@ -3,6 +3,8 @@
   table1       paper Table 1  (throughput / size / accuracy x 3 workloads)
   ablation     compression-recipe grid (extends the paper's 2 variants)
   runtime_opts caching + batching gains (paper §3.3)
+  serving      async core grid: rows/s + slot utilization vs slots x
+               buckets x sampler, base vs int8
   roofline     dry-run roofline table (§Roofline; needs results/dryrun.json)
 
 Prints ``name,us_per_call,derived`` CSV lines throughout.
@@ -15,13 +17,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def main() -> None:
-    from benchmarks import ablation, roofline, runtime_opts, table1
+    from benchmarks import ablation, roofline, runtime_opts, serving, table1
     from benchmarks.common import Csv
     csv = Csv()
     print("== IOLM-DB benchmark suite ==")
     table1.main(csv)
     ablation.main(csv)
     runtime_opts.main(csv)
+    serving.main(csv)
     roofline.main(csv)
     print("\n== CSV summary ==")
     for line in csv.lines:

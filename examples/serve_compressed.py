@@ -4,7 +4,8 @@
 
 Runs the full policy search for the chosen workload and serves the same
 batch of rows through all three models, printing the Table-1-style
-trade-off live.
+trade-off live.  ``--temperature/--top-k`` exercise the sampler fused
+into the engine's jitted decode step (0 = greedy, the default).
 """
 import argparse
 import os
@@ -19,6 +20,7 @@ import numpy as np
 from benchmarks.common import load_model, make_engine, task_accuracy
 from benchmarks.table1 import MAX_NEW, optimize_for
 from repro.core.compressed import param_bytes
+from repro.serving.sampler import SamplingConfig
 from repro.training import data as D
 
 
@@ -27,7 +29,12 @@ def main() -> None:
     ap.add_argument("--task", default="correct",
                     choices=("summarize", "correct", "join"))
     ap.add_argument("--rows", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    sampling = SamplingConfig(temperature=args.temperature,
+                              top_k=args.top_k, seed=args.seed)
 
     cfg, params, tok = load_model()
     rows = D.eval_rows(args.task, args.rows)
@@ -45,7 +52,7 @@ def main() -> None:
     print(f"\nserving {len(prompts)} rows of '{args.task}':")
     base_rps = None
     for nm, (p, c, nbytes) in models.items():
-        eng = make_engine(p, c, tok)
+        eng = make_engine(p, c, tok, sampling=sampling)
         t0 = time.time()
         outs = eng.generate(prompts, max_new=MAX_NEW[args.task])
         rps = len(prompts) / (time.time() - t0)

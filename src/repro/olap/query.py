@@ -190,13 +190,19 @@ class Query:
                 t = t.filter(op.kwargs["pred"])
                 continue
             # --- LLM operator interception ---
+            # The probe is a bounded calibration sample (the optimizer
+            # reads at most calib+eval rows and a 64-row data signature);
+            # the full column streams through the engine chunk-wise
+            # inside the operator, never materialized as prompts here.
+            n_probe = max(64, self.session.calib_rows
+                          + self.session.eval_rows)
             if op.kind == "join":
                 probe = [f"{op.kwargs['prompt']}{a} | {b}"
                          for a in t[op.kwargs["on"][0]][:32]
                          for b in op.kwargs["right"][op.kwargs["on"][1]][:2]]
             else:
                 probe = [op.kwargs["prompt"] + str(v)
-                         for v in t[op.kwargs["col"]]]
+                         for v in t[op.kwargs["col"]][:n_probe]]
             engine = (self.session.optimized_engine(self._qsig(op), probe)
                       if self.optimize else self.session.base_engine())
             if op.kind == "map":

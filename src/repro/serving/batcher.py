@@ -20,9 +20,14 @@ class Request:
     out_ids: List[int] = field(default_factory=list)
     done: bool = False
     cache_key: Optional[tuple] = None
+    text: Optional[str] = None       # decoded output, set on completion
+    truncated: bool = False          # prompt clipped to the top bucket
+    follower: bool = False           # riding on an in-flight duplicate
 
 
 def bucket_len(n: int, buckets: Sequence[int]) -> int:
+    if not buckets:
+        return n
     for b in buckets:
         if n <= b:
             return b

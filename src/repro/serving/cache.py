@@ -29,6 +29,25 @@ class ResultCache:
         self.misses += 1
         return None
 
+    def peek(self, key) -> Optional[str]:
+        """Lookup without touching hit/miss accounting or LRU order.
+
+        The engine separates *lookup* from *accounting*: a prompt whose
+        twin is still decoding counts as a hit (it never reaches the
+        model) even though the value isn't stored yet, so the engine
+        peeks first and then records exactly one hit or miss per
+        request via record_hit / record_miss.
+        """
+        return self._d.get(key)
+
+    def record_hit(self, key=None) -> None:
+        self.hits += 1
+        if key is not None and key in self._d:
+            self._d.move_to_end(key)
+
+    def record_miss(self) -> None:
+        self.misses += 1
+
     def put(self, key, value: str) -> None:
         self._d[key] = value
         self._d.move_to_end(key)

@@ -1,19 +1,37 @@
-"""Serving engine: continuous batching over fixed decode slots.
+"""Serving engine: asynchronous continuous batching over fixed decode slots.
 
 TPU-adapted vLLM-style serving (DESIGN.md §3): XLA wants static shapes,
 so instead of paged KV blocks the engine keeps a **fixed pool of decode
 slots** — the KV cache is stacked per-row state with a leading slot
 axis, and the decode step is ``vmap`` of the model's single-row decode
-over that axis.  That makes slot admission a uniform ``leaf.at[slot]
-.set(row_state)`` for EVERY architecture family (attention KV, rwkv
-state, mamba state, whisper cross-KV ... all have a leading slot axis by
-construction), compiled exactly once.
+over that axis.  Slot admission is one jitted batched scatter
+``leaf.at[slot_idxs].set(row_states)`` for the WHOLE admission batch,
+uniform across every architecture family (attention KV, rwkv state,
+mamba state, whisper cross-KV ... all have a leading slot axis by
+construction), compiled once per admission width.
 
-Flow per engine tick:
-  1. admit: take up to (free slots) queued requests, prefill them as one
-     length-bucketed batch, scatter their row states into free slots;
-  2. decode: one vmapped step for all slots (inactive slots masked);
-  3. retire: rows hitting EOS / max_new leave; their slots free up.
+The engine is an async core with three entry points:
+
+  ``submit(text)``  enqueue a request; duplicate prompts attach as
+                    followers to an in-flight leader (queued OR already
+                    decoding) and never touch a slot; finished prompts
+                    short-circuit through the result cache.
+  ``step()``        one engine tick: admit a batch into free slots
+                    (one bucketed prefill + one batched insert), run one
+                    vmapped decode step for all slots, retire rows that
+                    hit EOS / max_new.  Returns requests finished this
+                    tick — callers may keep ``submit()``-ing between
+                    ticks while decode is in flight.
+  ``drain()``       tick until queue and slots are empty.
+
+``generate(texts)`` is the synchronous convenience wrapper
+(submit-all + drain) used by the benchmarks.
+
+Sampling is part of the jitted decode step: a static ``SamplingConfig``
+(greedy / temperature / top-k, see sampler.py) is closed over at
+compile time and a PRNG key derived from ``fold_in(base, step_counter)``
+is threaded through, so ``temperature=0`` lowers to exactly the old
+``jnp.argmax`` decode.
 
 The result cache (cache.py) short-circuits duplicate rows before they
 ever reach a slot, and the instance-optimized (compressed) model drops
@@ -22,7 +40,7 @@ in transparently because every linear goes through compressed.matmul.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -32,7 +50,12 @@ import numpy as np
 from repro.models import api
 from repro.serving.batcher import Batcher, Request, bucket_len
 from repro.serving.cache import ResultCache
+from repro.serving.sampler import SamplingConfig, sample
 from repro.training.data import ByteTokenizer
+
+# Default bound on un-finished requests resident during generate_stream;
+# the single source for the streaming chunk (olap operators import it).
+DEFAULT_CHUNK = 64
 
 
 @dataclass
@@ -42,11 +65,21 @@ class EngineStats:
     prefills: int = 0
     decode_steps: int = 0
     cache_hits: int = 0
+    truncated: int = 0           # prompts clipped to the top bucket
+    peak_inflight: int = 0       # max queued+active requests ever resident
+    busy_slot_steps: int = 0     # slot-steps that decoded a live row
+    total_slot_steps: int = 0    # slot-steps executed (busy + idle)
     wall_s: float = 0.0
 
     @property
     def rows_per_s(self) -> float:
         return self.rows / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def slot_utilization(self) -> float:
+        """Fraction of decode-step slot work spent on live rows."""
+        return (self.busy_slot_steps / self.total_slot_steps
+                if self.total_slot_steps else 0.0)
 
 
 class Engine:
@@ -54,19 +87,38 @@ class Engine:
                  slots: int = 8, max_len: int = 256,
                  buckets: Sequence[int] = (32, 64, 128),
                  use_result_cache: bool = True, version: str = "base",
-                 extra_inputs: Optional[Dict] = None):
+                 extra_inputs: Optional[Dict] = None,
+                 sampling: Optional[SamplingConfig] = None):
         self.params = params
         self.cfg = cfg
         self.tok = tokenizer or ByteTokenizer(max(cfg.vocab_size, 260))
         self.slots = slots
         self.max_len = max_len
-        self.buckets = tuple(b for b in buckets if b < max_len)
+        # Bucket ladder invariants: non-empty, strictly below max_len (a
+        # prompt filling the whole cache leaves no room to decode), sorted,
+        # deduplicated.  Out-of-range user buckets clamp instead of vanish.
+        cap = max(1, max_len - 1)
+        ladder = sorted({min(int(b), cap) for b in buckets if int(b) > 0})
+        self.buckets = tuple(ladder) or (cap,)
         self.result_cache = ResultCache() if use_result_cache else None
         self.version = version
         self.batcher = Batcher(self.buckets)
         self.stats = EngineStats()
+        self.sampling = sampling or SamplingConfig()
         self._rid = 0
         self.extra_inputs = extra_inputs or {}
+
+        # async serving state -------------------------------------------
+        self._active: Dict[int, Request] = {}           # slot -> request
+        self._leaders: Dict[tuple, Request] = {}        # in-flight dedup
+        self._followers: Dict[tuple, List[Request]] = {}
+        self._cur_tok = np.zeros((self.slots,), np.int32)
+        self._cur_pos = np.zeros((self.slots,), np.int32)
+        self._key = jax.random.PRNGKey(self.sampling.seed)
+        # PRNG stream positions are private state, NOT stats: resetting
+        # engine.stats must never replay sampled tokens
+        self._admit_ctr = 0
+        self._decode_ctr = 0
 
         # --- jit'd single-row prefill, vmapped over the admission batch ---
         def row_prefill(params, toks):
@@ -74,33 +126,39 @@ class Engine:
             batch.update({k: v[None] for k, v in self.extra_inputs.items()})
             logits, cache = api.prefill(params, cfg, batch,
                                         max_len=max_len, compact_local=False)
-            return logits[0], cache  # leaves without leading batch axis? no:
+            return logits[0], cache
 
         self._prefill = {}
         for b in self.buckets:
             self._prefill[b] = jax.jit(
                 jax.vmap(row_prefill, in_axes=(None, 0)))
 
-        # --- slot-state scatter (uniform leading axis) ---
-        def insert(slot_state, row_state, slot_idx):
+        # --- batched slot-state scatter (uniform leading axis) ---
+        # row_states carry the vmapped admission axis in front; one call
+        # scatters the whole admission batch into its free slots.
+        def insert(slot_state, row_states, slot_idxs):
             return jax.tree.map(
-                lambda s, r: s.at[slot_idx].set(r.astype(s.dtype)),
-                slot_state, row_state)
+                lambda s, r: s.at[slot_idxs].set(r.astype(s.dtype)),
+                slot_state, row_states)
 
         self._insert = jax.jit(insert, donate_argnums=(0,))
 
-        # --- vmapped decode step over slots ---
+        # --- vmapped decode step over slots, sampling fused in ---
         def row_decode(params, cache, tok, pos):
             logits, cache = api.decode_step(params, cfg, cache,
                                             tok[None, None], pos[None],
                                             max_len=max_len)
             return logits[0, -1], cache
 
-        def step(params, slot_state, toks, pos):
+        sampling_cfg = self.sampling  # static: closed over at trace time
+
+        def step(params, slot_state, toks, pos, ctr):
             logits, state = jax.vmap(
                 row_decode, in_axes=(None, 0, 0, 0))(params, slot_state,
                                                      toks, pos)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            key = jax.random.fold_in(self._key, ctr)
+            nxt = sample(logits, key, temperature=sampling_cfg.temperature,
+                         top_k=sampling_cfg.top_k)
             return nxt, state
 
         self._decode = jax.jit(step, donate_argnums=(1,))
@@ -113,112 +171,183 @@ class Engine:
             lambda a: jnp.broadcast_to(a, (self.slots,) + a.shape).copy(),
             one)
 
+    # -- async API ------------------------------------------------------
     def submit(self, text: str, *, max_new: int = 32) -> Request:
+        """Enqueue one request; resolves immediately on a cache hit and
+        attaches as a follower when its prompt is already in flight."""
         ids = self.tok.encode(text, bos=True) + [self.tok.SEP]
         req = Request(rid=self._rid, prompt_ids=ids, max_new=max_new)
         self._rid += 1
         if self.result_cache is not None:
             req.cache_key = self.result_cache.key(text, max_new, self.version)
+            hit = self.result_cache.peek(req.cache_key)
+            if hit is not None:
+                self.result_cache.record_hit(req.cache_key)
+                self.stats.cache_hits += 1
+                req.out_ids = self.tok.encode(hit)
+                self._finalize(req, hit)
+                return req
+            if req.cache_key in self._leaders:
+                # duplicate of a queued OR actively decoding request:
+                # ride on the leader, never touch a slot.  Exactly one
+                # cache accounting event (a hit) for this lookup.
+                self.result_cache.record_hit(req.cache_key)
+                self.stats.cache_hits += 1
+                req.follower = True
+                self._followers.setdefault(req.cache_key, []).append(req)
+                req.prompt_ids = []
+                return req
+            self.result_cache.record_miss()
+            self._leaders[req.cache_key] = req
         self.batcher.add(req)
+        inflight = len(self.batcher) + len(self._active)
+        self.stats.peak_inflight = max(self.stats.peak_inflight, inflight)
         return req
 
-    def generate(self, texts: Sequence[str], *, max_new: int = 32,
-                 progress: bool = False) -> List[str]:
+    def step(self) -> List[Request]:
+        """One engine tick (admit -> decode -> retire); returns the
+        requests that finished during this tick."""
+        if self._slot_state is None:
+            self._init_slots()
+        finished: List[Request] = []
+        free = [s for s in range(self.slots) if s not in self._active]
+        # --- admit: one bucketed prefill + ONE batched slot insert ---
+        if free and len(self.batcher):
+            take = self.batcher.take(len(free))
+            if take:
+                top = self.buckets[-1]
+                for r in take:
+                    if len(r.prompt_ids) > top:
+                        r.truncated = True
+                        self.stats.truncated += 1
+                b = bucket_len(max(len(r.prompt_ids) for r in take),
+                               self.buckets)
+                toks = np.zeros((len(take), b), np.int32)
+                for i, r in enumerate(take):
+                    ids = r.prompt_ids[-b:]
+                    toks[i, :len(ids)] = ids
+                logits, rows = self._prefill[b](self.params,
+                                                jnp.asarray(toks))
+                self.stats.prefills += 1
+                # rows are right-padded: gather each row's logits at its
+                # last REAL position, not at the padding tail
+                lens = np.array([min(len(r.prompt_ids), b) for r in take])
+                last_logits = jnp.take_along_axis(
+                    logits, jnp.asarray(lens - 1)[:, None, None],
+                    axis=1)[:, 0]
+                # per-wave key: fold in a counter that advances every
+                # admission so successive waves draw independent samples
+                # (mirrors the decode path's per-step fold_in)
+                self._admit_ctr += 1
+                admit_key = (jax.random.fold_in(self._key,
+                                                self._admit_ctr + (1 << 30))
+                             if self.sampling.temperature > 0 else None)
+                first = np.asarray(sample(
+                    last_logits, admit_key,
+                    temperature=self.sampling.temperature,
+                    top_k=self.sampling.top_k)).astype(np.int32)
+                slot_idxs = np.asarray(free[:len(take)], np.int32)
+                self._slot_state = self._insert(
+                    self._slot_state, rows, jnp.asarray(slot_idxs))
+                for i, r in enumerate(take):
+                    s = int(slot_idxs[i])
+                    t0 = int(first[i])
+                    r.out_ids.append(t0)
+                    if t0 == self.tok.EOS or len(r.out_ids) >= r.max_new:
+                        # prefill token already ends the row (EOS) or
+                        # exhausts the budget: retire without ever
+                        # occupying a decode slot
+                        finished.extend(self._retire(r))
+                        continue
+                    self._active[s] = r
+                    self._cur_tok[s] = t0
+                    self._cur_pos[s] = int(lens[i])
+        if not self._active:
+            return finished
+        # --- decode one token for every active slot ---
+        nxt, self._slot_state = self._decode(
+            self.params, self._slot_state, jnp.asarray(self._cur_tok),
+            jnp.asarray(self._cur_pos), jnp.int32(self._decode_ctr))
+        self._decode_ctr += 1
+        self.stats.decode_steps += 1
+        self.stats.busy_slot_steps += len(self._active)
+        self.stats.total_slot_steps += self.slots
+        nxt = np.asarray(nxt)
+        # --- retire / advance ---
+        for s in list(self._active):
+            r = self._active[s]
+            t = int(nxt[s])
+            r.out_ids.append(t)
+            self._cur_tok[s] = t
+            self._cur_pos[s] += 1
+            if t == self.tok.EOS or len(r.out_ids) >= r.max_new \
+                    or self._cur_pos[s] >= self.max_len - 1:
+                del self._active[s]
+                finished.extend(self._retire(r))
+        return finished
+
+    def drain(self) -> List[Request]:
+        """Tick until every queued and active request has finished."""
+        finished: List[Request] = []
+        while len(self.batcher) or self._active:
+            finished.extend(self.step())
+        return finished
+
+    # -- completion plumbing -------------------------------------------
+    def _retire(self, req: Request) -> List[Request]:
+        """Finalize a decoded leader plus any followers riding on it;
+        returns every request completed by this retirement."""
+        text = self.tok.decode([t for t in req.out_ids if t != self.tok.EOS])
+        done = [req]
+        if self.result_cache is not None and req.cache_key is not None:
+            self.result_cache.put(req.cache_key, text)
+            self._leaders.pop(req.cache_key, None)
+            for f in self._followers.pop(req.cache_key, []):
+                f.out_ids = list(req.out_ids)
+                self._finalize(f, text)
+                done.append(f)
+        self._finalize(req, text)
+        return done
+
+    def _finalize(self, req: Request, text: str) -> None:
+        req.text = text
+        req.done = True
+        req.prompt_ids = []      # drop prompt residency as soon as possible
+        self.stats.rows += 1
+        self.stats.tokens_out += len(req.out_ids)
+
+    # -- synchronous convenience wrappers ------------------------------
+    def generate(self, texts: Sequence[str], *, max_new: int = 32) -> List[str]:
         """Continuous-batching run over all texts; returns decoded rows."""
         t0 = time.time()
         reqs = [self.submit(t, max_new=max_new) for t in texts]
-        followers: Dict[tuple, List[Request]] = {}
-        leaders: Dict[tuple, Request] = {}
-        for r in list(self.batcher.queue):
-            if self.result_cache is None:
-                continue
-            hit = self.result_cache.get(r.cache_key)
-            if hit is not None:
-                r.out_ids = self.tok.encode(hit)
-                r.done = True
-                self.stats.cache_hits += 1
-                self.batcher.queue.remove(r)
-            elif r.cache_key in leaders:
-                # duplicate row within this query: ride on the leader
-                followers.setdefault(r.cache_key, []).append(r)
-                self.stats.cache_hits += 1
-                self.result_cache.hits += 1
-                self.batcher.queue.remove(r)
-            else:
-                leaders[r.cache_key] = r
-        if self._slot_state is None:
-            self._init_slots()
-
-        active: Dict[int, Request] = {}          # slot -> request
-        cur_tok = np.zeros((self.slots,), np.int32)
-        cur_pos = np.zeros((self.slots,), np.int32)
-
-        while len(self.batcher) or active:
-            free = [s for s in range(self.slots) if s not in active]
-            # --- admit ---
-            if free and len(self.batcher):
-                take = self.batcher.take(len(free))
-                if take:
-                    b = bucket_len(max(len(r.prompt_ids) for r in take),
-                                   self.buckets)
-                    toks = np.zeros((len(take), b), np.int32)
-                    for i, r in enumerate(take):
-                        ids = r.prompt_ids[-b:]
-                        toks[i, :len(ids)] = ids
-                    logits, rows = self._prefill[b](self.params,
-                                                    jnp.asarray(toks))
-                    self.stats.prefills += 1
-                    # rows are right-padded: gather each row's logits at
-                    # its last REAL position, not at the padding tail
-                    lens = np.array([min(len(r.prompt_ids), b)
-                                     for r in take])
-                    last_logits = jnp.take_along_axis(
-                        logits, jnp.asarray(lens - 1)[:, None, None],
-                        axis=1)[:, 0]
-                    last = np.asarray(jnp.argmax(last_logits,
-                                                 axis=-1)).astype(np.int32)
-                    for i, r in enumerate(take):
-                        s = free[i]
-                        row = jax.tree.map(lambda a, i=i: a[i], rows)
-                        self._slot_state = self._insert(
-                            self._slot_state, row, jnp.asarray(s))
-                        active[s] = r
-                        n = int(lens[i])
-                        r.out_ids.append(int(last[i]))
-                        cur_tok[s] = last[i]
-                        cur_pos[s] = n
-            if not active:
-                continue
-            # --- decode one token for every active slot ---
-            nxt, self._slot_state = self._decode(
-                self.params, self._slot_state, jnp.asarray(cur_tok),
-                jnp.asarray(cur_pos))
-            self.stats.decode_steps += 1
-            nxt = np.asarray(nxt)
-            # --- retire / advance ---
-            for s in list(active):
-                r = active[s]
-                t = int(nxt[s])
-                r.out_ids.append(t)
-                cur_tok[s] = t
-                cur_pos[s] += 1
-                if t == self.tok.EOS or len(r.out_ids) >= r.max_new \
-                        or cur_pos[s] >= self.max_len - 1:
-                    r.done = True
-                    del active[s]
-
-        for key, flw in followers.items():
-            for r in flw:
-                r.out_ids = list(leaders[key].out_ids)
-                r.done = True
-        outs = []
-        for r in reqs:
-            ids = [t for t in r.out_ids if t != self.tok.EOS]
-            text = self.tok.decode(ids)
-            if self.result_cache is not None and r.cache_key is not None:
-                self.result_cache.put(r.cache_key, text)
-            outs.append(text)
-        self.stats.rows += len(reqs)
-        self.stats.tokens_out += sum(len(r.out_ids) for r in reqs)
+        self.drain()
         self.stats.wall_s += time.time() - t0
-        return outs
+        return [r.text for r in reqs]
+
+    def generate_stream(self, prompts, *, max_new: int = 32,
+                        chunk: int = DEFAULT_CHUNK) -> List[str]:
+        """The streaming operator contract: consume ``prompts`` (any
+        iterable) lazily, keeping at most ``chunk`` of THIS call's
+        requests un-finished at a time — decode ticks overlap with
+        prompt construction, and peak prompt residency is bounded by
+        ``chunk + slots`` instead of the prompt count.  Requests
+        submitted outside this call are ignored by the throttle (their
+        completions don't loosen the bound).  Returns decoded rows in
+        prompt order."""
+        t0 = time.time()
+        reqs: List[Request] = []
+        inflight = set()                  # queued/active rids owned here
+        for p in prompts:
+            r = self.submit(p, max_new=max_new)
+            reqs.append(r)
+            # followers hold no prompt and no slot, so they don't count
+            # against the residency bound the throttle enforces
+            if not r.done and not r.follower:
+                inflight.add(r.rid)
+            while len(inflight) >= max(1, chunk):
+                for f in self.step():
+                    inflight.discard(f.rid)
+        self.drain()
+        self.stats.wall_s += time.time() - t0
+        return [r.text for r in reqs]

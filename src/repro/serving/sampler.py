@@ -1,8 +1,24 @@
-"""Token sampling: greedy / temperature / top-k (f32 logits)."""
+"""Token sampling: greedy / temperature / top-k (f32 logits).
+
+``SamplingConfig`` is the static half (closed over when the engine
+traces its decode step — temperature/top_k pick the lowered program,
+seed roots the PRNG stream); the per-step key is derived inside the jit
+via ``fold_in(base_key, step_counter)`` so decode stays replayable and
+``temperature=0`` lowers to exactly the greedy ``argmax`` program.
+"""
 from __future__ import annotations
+
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingConfig:
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
 
 
 def greedy(logits: jax.Array) -> jax.Array:
@@ -11,6 +27,8 @@ def greedy(logits: jax.Array) -> jax.Array:
 
 def sample(logits: jax.Array, key, *, temperature: float = 0.0,
            top_k: int = 0) -> jax.Array:
+    """Sample next tokens from ``logits`` ([..., vocab]).  ``key`` may be
+    None when ``temperature <= 0`` (greedy needs no randomness)."""
     if temperature <= 0.0:
         return greedy(logits)
     lf = logits.astype(jnp.float32) / temperature

@@ -1,6 +1,12 @@
 """Property-based tests (hypothesis) on system invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt); skipping, not aborting collection")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import quantize as Q
