@@ -68,7 +68,11 @@ def init_cache(cfg, batch: int, max_len: int, *, compact_local: bool = True):
 
 
 def prefill(params, cfg, batch, *, max_len: int, compact_local: bool = True,
-            use_flash: bool = False):
+            use_flash: bool = False, lengths=None):
+    """``lengths`` [B] (optional): real token count per right-padded row.
+    Attention families ignore it (causality already isolates the pads);
+    recurrent families (rwkv/hybrid) need it so padding never leaks into
+    the carried state a decode step resumes from."""
     mod = family_module(cfg)
     kw: Dict[str, Any] = dict(max_len=max_len)
     if cfg.family == "encdec":
@@ -78,12 +82,46 @@ def prefill(params, cfg, batch, *, max_len: int, compact_local: bool = True,
         kw.update(compact_local=compact_local, use_flash=use_flash)
         return mod.prefill(params, cfg, batch["tokens"],
                            img_embs=batch.get("img_embs"), **kw)
-    return mod.prefill(params, cfg, batch["tokens"], **kw)
+    return mod.prefill(params, cfg, batch["tokens"], lengths=lengths, **kw)
 
 
 def decode_step(params, cfg, cache, tokens, pos, *, max_len: int):
     return family_module(cfg).decode_step(params, cfg, cache, tokens, pos,
                                           max_len=max_len)
+
+
+# ---------------------------------------------------------------------------
+# prefix-sharing prefill (serving: template-heavy OLAP prompts)
+# ---------------------------------------------------------------------------
+
+def supports_prefix(cfg) -> bool:
+    """Whether the family can seed per-row state from a shared prefilled
+    prompt prefix.  encdec needs encoder inputs and vlm splices image
+    embeddings ahead of the text — both break the pure token-prefix
+    contract, so they take the full-prefill path."""
+    return cfg.family in ("dense", "moe", "rwkv", "hybrid")
+
+
+def prefill_from(params, cfg, prefix_cache_entry, suffix_tokens, prefix_len,
+                 *, max_len: int, lengths=None):
+    """Continue a prefill from a stored prefix state: ``prefix_cache_entry``
+    is the cache pytree returned by ``prefill`` on the shared prefix
+    (batch=1 per engine row, absolute slots), ``suffix_tokens`` [B,S] are
+    the per-row remainder, ``prefix_len`` (traced scalar ok) is the number
+    of prefix tokens already resident.  Returns (suffix logits [B,S,V],
+    fully-populated cache) matching ``prefill`` on the concatenation —
+    attention families extend the KV at slots [prefix_len, prefix_len+S),
+    recurrent families resume their O(1) state.  ``lengths`` [B] is the
+    real (un-padded) suffix token count per row (recurrent families)."""
+    if not supports_prefix(cfg):
+        raise NotImplementedError(
+            f"prefix-sharing prefill unsupported for family {cfg.family!r}")
+    mod = family_module(cfg)
+    kw: Dict[str, Any] = dict(max_len=max_len)
+    if cfg.family in ("rwkv", "hybrid"):
+        kw["lengths"] = lengths
+    return mod.prefill_from(params, cfg, prefix_cache_entry, suffix_tokens,
+                            prefix_len, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -117,15 +117,9 @@ def decode_step(params: Params, cfg, cache, tokens, pos, *, max_len: int):
 
     def body(xc, xs):
         group, states, kv = xs
-        new_states = []
-        for u in range(K):
-            p = jax.tree.map(lambda a: a[u], group)
-            st = jax.tree.map(lambda a: a[u], states)
-            xc, st2 = M.block_apply(p, xc, cfg, state=st)
-            new_states.append(st2)
+        xc, stacked = M.stack_apply(group, states, xc, cfg)
         xc, kv2 = TF.block_decode(shared, kv, xc, cfg, kind="G", pos=pos,
                                   max_len=max_len)
-        stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_states)
         return xc, (stacked, kv2)
 
     x, (mstates, kvs) = jax.lax.scan(
@@ -146,7 +140,7 @@ def decode_step(params: Params, cfg, cache, tokens, pos, *, max_len: int):
                     "mamba_tail": new_tail}
 
 
-def prefill(params: Params, cfg, tokens, *, max_len: int, **_):
+def prefill(params: Params, cfg, tokens, *, max_len: int, lengths=None, **_):
     x = L.embed(params, cfg, tokens)
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
@@ -172,15 +166,9 @@ def prefill(params: Params, cfg, tokens, *, max_len: int, **_):
 
     def body(xc, xs):
         group, states = xs
-        new_states = []
-        for u in range(K):
-            p = jax.tree.map(lambda a: a[u], group)
-            st = jax.tree.map(lambda a: a[u], states)
-            xc, st2 = M.block_apply(p, xc, cfg, state=st)
-            new_states.append(st2)
+        xc, stacked = M.stack_apply(group, states, xc, cfg, lengths=lengths)
         xc, kv = shared_prefill(xc)
         xc = constrain(xc)
-        stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_states)
         return xc, (stacked, kv)
 
     cache0 = init_cache(cfg, B, max_len)
@@ -192,10 +180,48 @@ def prefill(params: Params, cfg, tokens, *, max_len: int, **_):
     if params["mamba_tail"] is not None:
         def tbody(xc, xs):
             p, st = xs
-            xc, st2 = M.block_apply(p, xc, cfg, state=st)
+            xc, st2 = M.block_apply(p, xc, cfg, state=st, lengths=lengths)
             return xc, st2
         x, new_tail = jax.lax.scan(jax.checkpoint(tbody), x,
                                    (params["mamba_tail"], cache0["mamba_tail"]),
+                                   unroll=cfg.scan_unroll)
+    x = L.norm(x, params["ln_f"], cfg)
+    logits = L.unembed(params, cfg, x)
+    return logits, {"mamba_groups": mstates, "shared_kv": kvs,
+                    "mamba_tail": new_tail}
+
+
+def prefill_from(params: Params, cfg, cache, tokens, start, *, max_len: int,
+                 lengths=None):
+    """Prefill only the suffix ``tokens`` [B,S] from a prefilled prefix
+    ``cache``: mamba recurrent states resume exactly where the prefix
+    left off, and the shared attention sites extend their KV caches at
+    absolute slots [start, start+S) (see transformer.prefill_from)."""
+    x = L.embed(params, cfg, tokens)
+    G, K, tail, _ = layout(cfg)
+    shared = params["shared"]
+    start = jnp.asarray(start, jnp.int32)
+
+    def body(xc, xs):
+        group, states, kv = xs
+        xc, stacked = M.stack_apply(group, states, xc, cfg, lengths=lengths)
+        xc, kv2 = TF.block_prefill_from(shared, kv, xc, cfg, kind="G",
+                                        start=start, max_len=max_len)
+        xc = constrain(xc)
+        return xc, (stacked, kv2)
+
+    x, (mstates, kvs) = jax.lax.scan(
+        body, x, (params["mamba_groups"], cache["mamba_groups"],
+                  cache["shared_kv"]), unroll=cfg.scan_unroll)
+    new_tail = cache["mamba_tail"]
+    if params["mamba_tail"] is not None:
+        def tbody(xc, xs):
+            p, st = xs
+            xc, st2 = M.block_apply(p, xc, cfg, state=st, lengths=lengths)
+            return xc, st2
+        x, new_tail = jax.lax.scan(tbody, x,
+                                   (params["mamba_tail"],
+                                    cache["mamba_tail"]),
                                    unroll=cfg.scan_unroll)
     x = L.norm(x, params["ln_f"], cfg)
     logits = L.unembed(params, cfg, x)

@@ -119,17 +119,50 @@ def ssd_chunked(x, dt, a, Bm, Cm, D, h0, chunk: int = 64):
 # block
 # ---------------------------------------------------------------------------
 
-def _conv1d(x, w, b, conv_state):
-    """Causal depthwise conv.  x: [B,T,ch]; w: [K,ch]; conv_state: [B,K-1,ch]."""
+def _conv1d(x, w, b, conv_state, lengths=None):
+    """Causal depthwise conv.  x: [B,T,ch]; w: [K,ch]; conv_state: [B,K-1,ch].
+
+    ``lengths`` [B]: with right-padded rows the carried conv window must
+    hold the last K-1 REAL inputs (possibly reaching back into the
+    incoming ``conv_state``), not the padding tail.
+    """
     K = w.shape[0]
     xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
     out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
-    new_state = xp[:, xp.shape[1] - (K - 1):]
+    if lengths is None:
+        new_state = xp[:, xp.shape[1] - (K - 1):]
+    else:
+        # real inputs occupy xp[:, K-1 : K-1+len); the window of the
+        # last K-1 real inputs starts at index len
+        idx = lengths[:, None] + jnp.arange(K - 1, dtype=jnp.int32)[None]
+        new_state = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
     return out + b[None, None], new_state
 
 
-def block_apply(p, x, cfg, *, state=None, chunk: int = 64):
-    """One Mamba2 block with residual.  x: [B,T,d]."""
+def stack_apply(stacked_params, states, x, cfg, *, chunk: int = 64,
+                lengths=None):
+    """Apply K layer-stacked mamba blocks (param/state leaves carry a
+    leading [K] axis) sequentially from ``states``, returning the output
+    and the re-stacked new states.  This is the cache-seeding primitive:
+    callers (hybrid prefill/decode, prefix-cache continued prefill) hand
+    in carried states instead of zeros and the recurrence resumes
+    exactly where the stored prefix left off."""
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    new_states = []
+    for u in range(K):
+        p = jax.tree.map(lambda a: a[u], stacked_params)
+        st = jax.tree.map(lambda a: a[u], states)
+        x, st2 = block_apply(p, x, cfg, state=st, chunk=chunk,
+                             lengths=lengths)
+        new_states.append(st2)
+    return x, jax.tree.map(lambda *a: jnp.stack(a), *new_states)
+
+
+def block_apply(p, x, cfg, *, state=None, chunk: int = 64, lengths=None):
+    """One Mamba2 block with residual.  x: [B,T,d].  ``lengths`` [B]
+    makes right-padding a state no-op: pad positions get dt=0 (so the
+    decay a=exp(-dt·e^A)=1 freezes h) and the conv window carries the
+    last real inputs — decode resumes from the unpadded prompt's state."""
     B, T, d = x.shape
     d_inner, H, P, N = dims(cfg)
     if state is None:
@@ -137,10 +170,14 @@ def block_apply(p, x, cfg, *, state=None, chunk: int = 64):
     h_in = L.norm(x, p["ln"], cfg)
     proj = matmul(h_in, p["in_proj"])
     z, xbc, dt_raw = jnp.split(proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
-    xbc, conv_state = _conv1d(xbc, p["conv_w"], p["conv_b"], state["conv"])
+    xbc, conv_state = _conv1d(xbc, p["conv_w"], p["conv_b"], state["conv"],
+                              lengths=lengths)
     xbc = jax.nn.silu(xbc)
     xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None])
+    if lengths is not None:
+        mask = jnp.arange(T, dtype=jnp.int32)[None, :] < lengths[:, None]
+        dt = dt * mask[:, :, None]
     a = jnp.exp(-dt * jnp.exp(p["A_log"])[None, None])
     xh = xs.reshape(B, T, H, P)
     if T == 1:

@@ -153,8 +153,21 @@ def _tm_inputs(p, x, xx):
     return mix(0), mix(1), mix(2), mix(3), mix(4)   # r,k,v,g,w inputs
 
 
-def time_mix(p, x, cfg, *, shift_prev, S0, chunk: int = 32):
-    """x: [B,T,d] (post-ln).  Returns (out, S_final, new_shift)."""
+def _last_real(x, lengths):
+    """x [B,T,d], lengths [B] -> x at each row's last REAL position."""
+    idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+
+
+def time_mix(p, x, cfg, *, shift_prev, S0, chunk: int = 32, mask=None,
+             lengths=None):
+    """x: [B,T,d] (post-ln).  Returns (out, S_final, new_shift).
+
+    ``mask``/``lengths`` make right-padding a state no-op: pad positions
+    get decay w=1 and key k=0 (so S carries through unchanged) and the
+    token-shift carry is taken at the last real position — the state a
+    decode step resumes from is exactly the unpadded prompt's state.
+    """
     B, T, d = x.shape
     H, N = cfg.n_heads, cfg.rwkv_head_dim
     xx = _token_shift(x, shift_prev)
@@ -166,6 +179,10 @@ def time_mix(p, x, cfg, *, shift_prev, S0, chunk: int = 32):
     dd = jnp.tanh(matmul(xw, p["wa1"]))
     dd = matmul(dd, p["wa2"]).astype(jnp.float32)
     w = jnp.exp(-jnp.exp(p["w0"][None, None] + dd)).reshape(B, T, H, N)
+    if mask is not None:
+        mm = mask[:, :, None, None]
+        w = jnp.where(mm, w, 1.0)
+        k = jnp.where(mm, k, 0.0)
     u = p["u"].astype(jnp.float32).reshape(H, N)
     if T == 1:
         out, S = wkv6_sequential(r, k, v, w, u, S0)
@@ -180,10 +197,11 @@ def time_mix(p, x, cfg, *, shift_prev, S0, chunk: int = 32):
     out = oh.reshape(B, T, d) * p["gn"]["w"].astype(jnp.float32) \
         + p["gn"]["b"].astype(jnp.float32)
     out = (out * g.astype(jnp.float32)).astype(x.dtype)
-    return matmul(out, p["wo"]), S, x[:, -1]
+    carry = x[:, -1] if lengths is None else _last_real(x, lengths)
+    return matmul(out, p["wo"]), S, carry
 
 
-def channel_mix(p, x, *, shift_prev):
+def channel_mix(p, x, *, shift_prev, lengths=None):
     xx = _token_shift(x, shift_prev)
     mu = p["mu"].astype(jnp.float32)
     xf, xxf = x.astype(jnp.float32), xx.astype(jnp.float32)
@@ -191,21 +209,28 @@ def channel_mix(p, x, *, shift_prev):
     xr = (xf + (xxf - xf) * mu[1]).astype(x.dtype)
     kk = jnp.square(jax.nn.relu(matmul(xk, p["wk"])))
     out = jax.nn.sigmoid(matmul(xr, p["wr"])) * matmul(kk, p["wv"])
-    return out, x[:, -1]
+    carry = x[:, -1] if lengths is None else _last_real(x, lengths)
+    return out, carry
 
 
-def block_apply(p, x, cfg, *, state=None, chunk: int = 32):
-    """One RWKV layer.  state: {"S","tm_x","cm_x"} or None (zeros)."""
+def block_apply(p, x, cfg, *, state=None, chunk: int = 32, lengths=None):
+    """One RWKV layer.  state: {"S","tm_x","cm_x"} or None (zeros).
+    ``lengths`` [B]: real (un-padded) token count per row — pad positions
+    leave the carried state untouched (see time_mix)."""
     B, T, d = x.shape
     H, N = cfg.n_heads, cfg.rwkv_head_dim
     if state is None:
         state = init_layer_state(cfg, B, x.dtype)
+    mask = (None if lengths is None
+            else jnp.arange(T, dtype=jnp.int32)[None, :] < lengths[:, None])
     h = L.norm(x, p["ln1"], cfg)
     a, S, tm_x = time_mix(p["tm"], h, cfg, shift_prev=state["tm_x"].astype(h.dtype),
-                          S0=state["S"], chunk=chunk)
+                          S0=state["S"], chunk=chunk, mask=mask,
+                          lengths=lengths)
     x = x + a
     h = L.norm(x, p["ln2"], cfg)
-    m, cm_x = channel_mix(p["cm"], h, shift_prev=state["cm_x"].astype(h.dtype))
+    m, cm_x = channel_mix(p["cm"], h, shift_prev=state["cm_x"].astype(h.dtype),
+                          lengths=lengths)
     x = x + m
     return x, {"S": S, "tm_x": tm_x, "cm_x": cm_x}
 
@@ -267,15 +292,39 @@ def decode_step(params: Params, cfg, cache, tokens, pos, *, max_len: int = 0):
     return logits, {"blocks": [states], "tail": []}
 
 
-def prefill(params: Params, cfg, tokens, *, max_len: int = 0, **_):
+def prefill(params: Params, cfg, tokens, *, max_len: int = 0, lengths=None,
+            **_):
     x = L.embed(params, cfg, tokens)
 
     def body(xc, p):
-        xc, st = block_apply(p, xc, cfg)
+        xc, st = block_apply(p, xc, cfg, lengths=lengths)
         xc = constrain(xc)
         return xc, st
 
     x, states = jax.lax.scan(jax.checkpoint(body), x, params["blocks"][0],
+                             unroll=cfg.scan_unroll)
+    x = L.norm(x, params["ln_f"], cfg)
+    logits = L.unembed(params, cfg, x)
+    return logits, {"blocks": [states], "tail": []}
+
+
+def prefill_from(params: Params, cfg, cache, tokens, start, *,
+                 max_len: int = 0, lengths=None):
+    """Prefill the suffix ``tokens`` starting from the recurrent state in
+    ``cache`` (a prefilled template prefix).  The WKV state is O(1) and
+    position-free, so seeding is exact by construction: ``start`` is
+    unused beyond the shared signature."""
+    del start
+    x = L.embed(params, cfg, tokens)
+
+    def body(xc, xs):
+        p, st = xs
+        xc, st2 = block_apply(p, xc, cfg, state=st, lengths=lengths)
+        xc = constrain(xc)
+        return xc, st2
+
+    x, states = jax.lax.scan(jax.checkpoint(body), x,
+                             (params["blocks"][0], cache["blocks"][0]),
                              unroll=cfg.scan_unroll)
     x = L.norm(x, params["ln_f"], cfg)
     logits = L.unembed(params, cfg, x)

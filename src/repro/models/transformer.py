@@ -325,10 +325,8 @@ def _masked_decode(q, k_cache, v_cache, valid, cap):
     return out.reshape(B, 1, H, D)
 
 
-def block_decode(p, c, x, cfg, *, kind: str, pos, max_len: int):
-    a, c2 = _decode_attn_block(p, c, x, cfg, kind=kind, pos=pos, max_len=max_len)
-    x = x + a
-    h = norm(x, p["ln2"], cfg)
+def _mlp_section(p, h, cfg):
+    """Inference-mode FFN half of a block (dense / moe / shared / residual)."""
     if "moe" in p:
         m, _ = L.moe_block(p["moe"], h, cfg, train=False)
         if "shared_mlp" in p:
@@ -339,7 +337,14 @@ def block_decode(p, c, x, cfg, *, kind: str, pos, max_len: int):
         m = L.mlp_block(p["mlp"], h)
     if "ln2_post" in p:
         m = norm(m, p["ln2_post"], cfg)
-    return x + m, c2
+    return m
+
+
+def block_decode(p, c, x, cfg, *, kind: str, pos, max_len: int):
+    a, c2 = _decode_attn_block(p, c, x, cfg, kind=kind, pos=pos, max_len=max_len)
+    x = x + a
+    h = norm(x, p["ln2"], cfg)
+    return x + _mlp_section(p, h, cfg), c2
 
 
 def decode_step(params: Params, cfg, cache, tokens, pos, *, max_len: int):
@@ -420,17 +425,7 @@ def prefill(params: Params, cfg, tokens, *, img_embs=None, max_len: int,
             a = norm(a, p["ln1_post"], cfg)
         xc = xc + a
         h = norm(xc, p["ln2"], cfg)
-        if "moe" in p:
-            m, _ = L.moe_block(p["moe"], h, cfg, train=False)
-            if "shared_mlp" in p:
-                m = m + L.mlp_block(p["shared_mlp"], h)
-            if "dense_mlp" in p:
-                m = m + L.mlp_block(p["dense_mlp"], h)
-        else:
-            m = L.mlp_block(p["mlp"], h)
-        if "ln2_post" in p:
-            m = norm(m, p["ln2_post"], cfg)
-        return xc + m, kv_entry(kind, k, v)
+        return xc + _mlp_section(p, h, cfg), kv_entry(kind, k, v)
 
     def body(xc, member_params):
         caches = []
@@ -449,3 +444,94 @@ def prefill(params: Params, cfg, tokens, *, img_embs=None, max_len: int,
     x = norm(x, params["ln_f"], cfg)
     logits = L.unembed(params, cfg, x)
     return logits, {"blocks": block_caches, "tail": tail_caches}
+
+
+# ---------------------------------------------------------------------------
+# continued prefill: suffix chunk against a prefilled prefix cache
+# ---------------------------------------------------------------------------
+
+def _masked_chunk(q, k_cache, v_cache, valid, cap):
+    """q [B,S,H,D], cache [B,T,K,D], valid [B,S,T] bool (True = attend)."""
+    B, S, H, D = q.shape
+    K = k_cache.shape[2]
+    qg = q.reshape(B, S, K, H // K, D)
+    mask = valid[:, None, None]                     # [B,1,1,S,T]
+    out = L._sdpa(qg, k_cache, v_cache, mask, cap)
+    return out.reshape(B, S, H, D)
+
+
+def _chunk_attn_block(p, c, x, cfg, *, kind: str, start, max_len: int):
+    """Attention half of one block over an S-token chunk whose first token
+    sits at absolute position ``start`` (traced scalar): the chunk's k/v
+    are written into the cache at slots [start, start+S) and queries
+    attend to every cached slot <= their own position (windowed for local
+    layers).  With a template prefix at slots [0, start) this IS per-row
+    prefill restricted to the row suffix."""
+    B, S, _ = x.shape
+    h = norm(x, p["ln1"], cfg)
+    positions = jnp.broadcast_to(start + jnp.arange(S, dtype=jnp.int32),
+                                 (B, S))
+    q, k, v = L._qkv(p["attn"], h, cfg, positions, _theta(cfg, kind))
+    T = c["k"].shape[1]
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        c["k"], k.astype(c["k"].dtype), start, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        c["v"], v.astype(c["v"].dtype), start, axis=1)
+    slots = jnp.arange(T, dtype=jnp.int32)[None, None, :]       # [1,1,T]
+    qpos = positions[:, :, None]                                # [B,S,1]
+    valid = slots <= qpos
+    if kind == "L":
+        valid = valid & (slots > qpos - cfg.window_size)
+    out = _masked_chunk(q, ck, cv, valid, cfg.attn_softcap)
+    a = matmul(out.reshape(B, S, -1), p["attn"]["wo"])
+    if "ln1_post" in p:
+        a = norm(a, p["ln1_post"], cfg)
+    return a, {"k": ck, "v": cv}
+
+
+def block_prefill_from(p, c, x, cfg, *, kind: str, start, max_len: int):
+    """Full block (attn + FFN) for a suffix chunk seeded from cache ``c``
+    — the multi-token generalization of ``block_decode`` (hybrid reuses
+    it for its shared attention sites)."""
+    a, c2 = _chunk_attn_block(p, c, x, cfg, kind=kind, start=start,
+                              max_len=max_len)
+    x = x + a
+    h = norm(x, p["ln2"], cfg)
+    return x + _mlp_section(p, h, cfg), c2
+
+
+def prefill_from(params: Params, cfg, cache, tokens, start, *, max_len: int):
+    """Prefill only the suffix ``tokens`` [B,S] whose shared prefix
+    (absolute positions [0, start)) is already resident in ``cache``.
+
+    Returns (logits [B,S,V], populated cache) exactly like ``prefill``
+    run on prefix+suffix, but spending trunk FLOPs on S tokens instead
+    of start+S.  Cache slots are absolute (engine serving layout,
+    ``compact_local=False``)."""
+    x = L.embed(params, cfg, tokens)
+    start = jnp.asarray(start, jnp.int32)
+    unit, R, tail = pattern_unit(cfg)
+
+    def body(xc, xs):
+        member_params, member_cache = xs
+        new_caches = []
+        for u, kind in enumerate(unit):
+            xc, c2 = block_prefill_from(member_params[u], member_cache[u],
+                                        xc, cfg, kind=kind, start=start,
+                                        max_len=max_len)
+            xc = constrain(xc)
+            new_caches.append(c2)
+        return xc, new_caches
+
+    x, new_block_cache = jax.lax.scan(body, x,
+                                      (params["blocks"], cache["blocks"]),
+                                      unroll=cfg.scan_unroll)
+    new_tail = []
+    for i, p in enumerate(params["tail"]):
+        x, c2 = block_prefill_from(p, cache["tail"][i], x, cfg,
+                                   kind=unit[i % len(unit)], start=start,
+                                   max_len=max_len)
+        new_tail.append(c2)
+    x = norm(x, params["ln_f"], cfg)
+    logits = L.unembed(params, cfg, x)
+    return logits, {"blocks": new_block_cache, "tail": new_tail}

@@ -219,4 +219,13 @@ class Query:
                 t = OPS.llm_join(t, op.kwargs["right"], op.kwargs["on"],
                                  engine, prompt=op.kwargs["prompt"],
                                  max_new=op.kwargs["max_new"])
+            st = getattr(engine, "stats", None)
+            if st is not None and getattr(st, "prefix_hits", 0):
+                # the compressed variant's prefix entries are keyed by
+                # engine.version, so a recompression never reuses stale
+                # prefix state — hits here are same-version by construction
+                self.session.log.append(
+                    f"[prefix] {op.kind}: {st.prefix_hits} rows seeded "
+                    f"from shared prefix, {st.prefill_tokens_saved} "
+                    f"prefill tokens saved (v={engine.version})")
         return t

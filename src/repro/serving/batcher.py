@@ -14,7 +14,7 @@ from typing import List, Optional, Sequence
 @dataclass
 class Request:
     rid: int
-    prompt_ids: List[int]
+    prompt_ids: List[int]            # full prompt, or row suffix when split
     max_new: int
     # filled during serving
     out_ids: List[int] = field(default_factory=list)
@@ -23,6 +23,9 @@ class Request:
     text: Optional[str] = None       # decoded output, set on completion
     truncated: bool = False          # prompt clipped to the top bucket
     follower: bool = False           # riding on an in-flight duplicate
+    # prefix sharing: template token prefix split off at submit()
+    prefix_ids: Optional[List[int]] = None
+    prefix_key: Optional[tuple] = None   # PrefixCache key (ids, version)
 
 
 def bucket_len(n: int, buckets: Sequence[int]) -> int:
@@ -45,15 +48,20 @@ class Batcher:
         self.queue.append(req)
 
     def take(self, n: int) -> List[Request]:
-        """Up to n requests sharing one length bucket (FIFO head defines
-        the bucket so no request starves)."""
+        """Up to n requests sharing one length bucket AND one prefix
+        entry (FIFO head defines both so no request starves).  Prefix
+        uniformity matters because admission seeds every row of the
+        batch from a single shared prefix state; requests are bucketed
+        on their *suffix* when a prefix was split off."""
         if not self.queue or n <= 0:
             return []
-        head_b = bucket_len(len(self.queue[0].prompt_ids), self.buckets)
+        head = self.queue[0]
+        head_b = bucket_len(len(head.prompt_ids), self.buckets)
         out, rest = [], []
         for r in self.queue:
-            if len(out) < n and bucket_len(len(r.prompt_ids),
-                                           self.buckets) == head_b:
+            if len(out) < n and r.prefix_key == head.prefix_key \
+                    and bucket_len(len(r.prompt_ids),
+                                   self.buckets) == head_b:
                 out.append(r)
             else:
                 rest.append(r)

@@ -36,6 +36,13 @@ is threaded through, so ``temperature=0`` lowers to exactly the old
 The result cache (cache.py) short-circuits duplicate rows before they
 ever reach a slot, and the instance-optimized (compressed) model drops
 in transparently because every linear goes through compressed.matmul.
+
+Template-heavy OLAP prompts additionally share one prefilled prompt
+prefix: ``submit(text, prefix=template)`` splits the prompt at the
+template boundary, a ``PrefixCache`` stores the template's prefilled
+state once per (template, model version), and admission seeds every
+row's slot state from it so per-row prefill processes only the row
+suffix (see README.md §Prefix-sharing KV cache).
 """
 from __future__ import annotations
 
@@ -49,7 +56,7 @@ import numpy as np
 
 from repro.models import api
 from repro.serving.batcher import Batcher, Request, bucket_len
-from repro.serving.cache import ResultCache
+from repro.serving.cache import PrefixCache, ResultCache
 from repro.serving.sampler import SamplingConfig, sample
 from repro.training.data import ByteTokenizer
 
@@ -69,6 +76,9 @@ class EngineStats:
     peak_inflight: int = 0       # max queued+active requests ever resident
     busy_slot_steps: int = 0     # slot-steps that decoded a live row
     total_slot_steps: int = 0    # slot-steps executed (busy + idle)
+    prefix_hits: int = 0         # rows seeded from a shared prefix state
+    prefill_tokens: int = 0      # padded prompt tokens actually prefilled
+    prefill_tokens_saved: int = 0  # prefix tokens NOT re-prefilled per row
     wall_s: float = 0.0
 
     @property
@@ -87,6 +97,7 @@ class Engine:
                  slots: int = 8, max_len: int = 256,
                  buckets: Sequence[int] = (32, 64, 128),
                  use_result_cache: bool = True, version: str = "base",
+                 use_prefix_cache: bool = True,
                  extra_inputs: Optional[Dict] = None,
                  sampling: Optional[SamplingConfig] = None):
         self.params = params
@@ -102,6 +113,13 @@ class Engine:
         self.buckets = tuple(ladder) or (cap,)
         self.result_cache = ResultCache() if use_result_cache else None
         self.version = version
+        # prefix sharing needs a family that can seed per-row state from a
+        # stored prompt prefix, and no extra per-row inputs (img/enc) that
+        # would sit ahead of the text tokens
+        self.prefix_cache = (PrefixCache()
+                             if use_prefix_cache and api.supports_prefix(cfg)
+                             and not (extra_inputs or {}) else None)
+        self._prefix_ids_memo: Dict[str, tuple] = {}
         self.batcher = Batcher(self.buckets)
         self.stats = EngineStats()
         self.sampling = sampling or SamplingConfig()
@@ -121,17 +139,39 @@ class Engine:
         self._decode_ctr = 0
 
         # --- jit'd single-row prefill, vmapped over the admission batch ---
-        def row_prefill(params, toks):
+        # ln is the row's REAL token count: recurrent families must not
+        # absorb the bucket's right-padding into their carried state
+        def row_prefill(params, toks, ln):
             batch = {"tokens": toks[None]}
             batch.update({k: v[None] for k, v in self.extra_inputs.items()})
             logits, cache = api.prefill(params, cfg, batch,
-                                        max_len=max_len, compact_local=False)
+                                        max_len=max_len, compact_local=False,
+                                        lengths=ln[None])
             return logits[0], cache
 
         self._prefill = {}
         for b in self.buckets:
             self._prefill[b] = jax.jit(
-                jax.vmap(row_prefill, in_axes=(None, 0)))
+                jax.vmap(row_prefill, in_axes=(None, 0, 0)))
+
+        # --- suffix-only prefill seeded from a shared prefix state ---
+        # prefix_state is the batch=1 cache pytree of the prefilled
+        # template prefix, broadcast (in_axes=None) to every admitted
+        # row; each row processes only its suffix tokens and returns a
+        # fully-populated per-row state for the batched slot insert.
+        def row_prefill_from(params, prefix_state, toks, plen, ln):
+            logits, cache = api.prefill_from(params, cfg, prefix_state,
+                                             toks[None], plen,
+                                             max_len=max_len,
+                                             lengths=ln[None])
+            return logits[0], cache
+
+        self._prefill_from = {}
+        if self.prefix_cache is not None:
+            for b in self.buckets:
+                self._prefill_from[b] = jax.jit(
+                    jax.vmap(row_prefill_from,
+                             in_axes=(None, None, 0, None, 0)))
 
         # --- batched slot-state scatter (uniform leading axis) ---
         # row_states carry the vmapped admission axis in front; one call
@@ -172,11 +212,51 @@ class Engine:
             one)
 
     # -- async API ------------------------------------------------------
-    def submit(self, text: str, *, max_new: int = 32) -> Request:
+    def _encode_prefix(self, prefix: str):
+        """Memoized template encode: the prefix is identical across an
+        operator's whole row stream, so the per-row hot path must not
+        re-encode it (or rebuild its cache-key tuple) per submit."""
+        hit = self._prefix_ids_memo.get(prefix)
+        if hit is None:
+            p_ids = self.tok.encode(prefix, bos=True)
+            hit = (p_ids, self.prefix_cache.key(p_ids, self.version))
+            self._prefix_ids_memo[prefix] = hit
+        return hit
+
+    def _split_prefix(self, text: str, prefix: Optional[str]):
+        """(prefix_ids, suffix_ids, prefix_key) when the shared-template
+        split is usable, else (None, full_ids, None).  The byte
+        tokenizer concatenates (enc(a+b) == enc(a)+enc(b)), so splitting
+        at the template boundary preserves the exact token stream; the
+        split is refused whenever the full prompt would have been
+        clipped to the top bucket (truncation semantics — and outputs —
+        stay byte-identical to the full-prompt path) or the stacked
+        prefix+suffix bucket would not leave a decode slot below
+        max_len."""
+        if (prefix is not None and self.prefix_cache is not None
+                and len(text) > len(prefix) and text.startswith(prefix)):
+            p_ids, pkey = self._encode_prefix(prefix)
+            s_ids = self.tok.encode(text[len(prefix):]) + [self.tok.SEP]
+            if len(p_ids) + len(s_ids) <= self.buckets[-1] \
+                    and len(p_ids) + bucket_len(len(s_ids), self.buckets) \
+                    <= self.max_len - 1:
+                return p_ids, s_ids, pkey
+            # token stream of the refused split == the full encode
+            return None, p_ids + s_ids, None
+        return None, self.tok.encode(text, bos=True) + [self.tok.SEP], None
+
+    def submit(self, text: str, *, max_new: int = 32,
+               prefix: Optional[str] = None) -> Request:
         """Enqueue one request; resolves immediately on a cache hit and
-        attaches as a follower when its prompt is already in flight."""
-        ids = self.tok.encode(text, bos=True) + [self.tok.SEP]
+        attaches as a follower when its prompt is already in flight.
+        ``prefix`` marks the shared template prefix of ``text`` (operators
+        pass their prompt template): rows sharing it are prefilled from
+        one cached prefix state and bucketed on their suffix only."""
+        prefix_ids, ids, pkey = self._split_prefix(text, prefix)
         req = Request(rid=self._rid, prompt_ids=ids, max_new=max_new)
+        if prefix_ids is not None:
+            req.prefix_ids = prefix_ids
+            req.prefix_key = pkey
         self._rid += 1
         if self.result_cache is not None:
             req.cache_key = self.result_cache.key(text, max_new, self.version)
@@ -226,12 +306,35 @@ class Engine:
                 for i, r in enumerate(take):
                     ids = r.prompt_ids[-b:]
                     toks[i, :len(ids)] = ids
-                logits, rows = self._prefill[b](self.params,
-                                                jnp.asarray(toks))
+                lens = np.array([min(len(r.prompt_ids), b) for r in take])
+                pk = take[0].prefix_key     # uniform across the batch
+                if pk is not None:
+                    # seed every row from the shared prefilled prefix and
+                    # prefill only the suffixes.  A fresh entry costs one
+                    # prefix-length prefill; every other row in this and
+                    # all later admissions skips it entirely.
+                    entry = self.prefix_cache.get(pk)
+                    fresh = entry is None
+                    if fresh:
+                        entry = self._build_prefix_entry(
+                            pk, take[0].prefix_ids)
+                    plen = entry.prefix_len
+                    logits, rows = self._prefill_from[b](
+                        self.params, entry.state, jnp.asarray(toks),
+                        jnp.int32(plen), jnp.asarray(lens, jnp.int32))
+                    seeded = len(take) - (1 if fresh else 0)
+                    entry.hits += seeded
+                    self.stats.prefix_hits += seeded
+                    self.stats.prefill_tokens_saved += plen * seeded
+                else:
+                    plen = 0
+                    logits, rows = self._prefill[b](
+                        self.params, jnp.asarray(toks),
+                        jnp.asarray(lens, jnp.int32))
                 self.stats.prefills += 1
+                self.stats.prefill_tokens += len(take) * b
                 # rows are right-padded: gather each row's logits at its
                 # last REAL position, not at the padding tail
-                lens = np.array([min(len(r.prompt_ids), b) for r in take])
                 last_logits = jnp.take_along_axis(
                     logits, jnp.asarray(lens - 1)[:, None, None],
                     axis=1)[:, 0]
@@ -261,7 +364,7 @@ class Engine:
                         continue
                     self._active[s] = r
                     self._cur_tok[s] = t0
-                    self._cur_pos[s] = int(lens[i])
+                    self._cur_pos[s] = plen + int(lens[i])
         if not self._active:
             return finished
         # --- decode one token for every active slot ---
@@ -293,6 +396,18 @@ class Engine:
             finished.extend(self.step())
         return finished
 
+    # -- prefix sharing -------------------------------------------------
+    def _build_prefix_entry(self, key, prefix_ids):
+        """One-time prefill of a template prefix (batch=1, absolute
+        slots); the stored state seeds every row that shares it.  Runs
+        eagerly: once per (template, version), off the jit hot path."""
+        toks = jnp.asarray(np.asarray(prefix_ids, np.int32)[None])
+        _, cache = api.prefill(self.params, self.cfg, {"tokens": toks},
+                               max_len=self.max_len, compact_local=False)
+        self.stats.prefills += 1
+        self.stats.prefill_tokens += len(prefix_ids)
+        return self.prefix_cache.put(key, cache, len(prefix_ids))
+
     # -- completion plumbing -------------------------------------------
     def _retire(self, req: Request) -> List[Request]:
         """Finalize a decoded leader plus any followers riding on it;
@@ -317,16 +432,19 @@ class Engine:
         self.stats.tokens_out += len(req.out_ids)
 
     # -- synchronous convenience wrappers ------------------------------
-    def generate(self, texts: Sequence[str], *, max_new: int = 32) -> List[str]:
+    def generate(self, texts: Sequence[str], *, max_new: int = 32,
+                 prefix: Optional[str] = None) -> List[str]:
         """Continuous-batching run over all texts; returns decoded rows."""
         t0 = time.time()
-        reqs = [self.submit(t, max_new=max_new) for t in texts]
+        reqs = [self.submit(t, max_new=max_new, prefix=prefix)
+                for t in texts]
         self.drain()
         self.stats.wall_s += time.time() - t0
         return [r.text for r in reqs]
 
     def generate_stream(self, prompts, *, max_new: int = 32,
-                        chunk: int = DEFAULT_CHUNK) -> List[str]:
+                        chunk: int = DEFAULT_CHUNK,
+                        prefix: Optional[str] = None) -> List[str]:
         """The streaming operator contract: consume ``prompts`` (any
         iterable) lazily, keeping at most ``chunk`` of THIS call's
         requests un-finished at a time — decode ticks overlap with
@@ -339,7 +457,7 @@ class Engine:
         reqs: List[Request] = []
         inflight = set()                  # queued/active rids owned here
         for p in prompts:
-            r = self.submit(p, max_new=max_new)
+            r = self.submit(p, max_new=max_new, prefix=prefix)
             reqs.append(r)
             # followers hold no prompt and no slot, so they don't count
             # against the residency bound the throttle enforces

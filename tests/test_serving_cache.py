@@ -1,0 +1,218 @@
+"""serving/cache.py: ResultCache LRU/version/accounting, PrefixCache,
+and end-to-end prefix-sharing exactness across model families."""
+import jax
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.serving.batcher import Batcher, Request
+from repro.serving.cache import PrefixCache, ResultCache
+from repro.serving.engine import Engine
+
+
+class TestResultCache:
+    def test_lru_eviction_at_capacity(self):
+        rc = ResultCache(capacity=3)
+        for i in range(4):
+            rc.put(rc.key(f"p{i}", 8), f"v{i}")
+        assert len(rc._d) == 3
+        assert rc.peek(rc.key("p0", 8)) is None      # oldest evicted
+        assert rc.peek(rc.key("p3", 8)) == "v3"
+
+    def test_get_refreshes_lru_order(self):
+        rc = ResultCache(capacity=2)
+        rc.put(rc.key("a", 1), "A")
+        rc.put(rc.key("b", 1), "B")
+        assert rc.get(rc.key("a", 1)) == "A"         # refresh a
+        rc.put(rc.key("c", 1), "C")                  # evicts b, not a
+        assert rc.peek(rc.key("a", 1)) == "A"
+        assert rc.peek(rc.key("b", 1)) is None
+
+    def test_peek_touches_neither_counters_nor_order(self):
+        rc = ResultCache(capacity=2)
+        rc.put(rc.key("a", 1), "A")
+        rc.put(rc.key("b", 1), "B")
+        assert rc.peek(rc.key("a", 1)) == "A"
+        assert (rc.hits, rc.misses) == (0, 0)
+        rc.put(rc.key("c", 1), "C")                  # a was NOT refreshed
+        assert rc.peek(rc.key("a", 1)) is None
+
+    def test_record_hit_refreshes_and_counts(self):
+        rc = ResultCache(capacity=2)
+        rc.put(rc.key("a", 1), "A")
+        rc.put(rc.key("b", 1), "B")
+        rc.record_hit(rc.key("a", 1))                # dedup-path accounting
+        rc.record_miss()
+        assert (rc.hits, rc.misses) == (1, 1)
+        assert abs(rc.hit_rate - 0.5) < 1e-9
+        rc.put(rc.key("c", 1), "C")                  # b evicted, a refreshed
+        assert rc.peek(rc.key("a", 1)) == "A"
+        assert rc.peek(rc.key("b", 1)) is None
+
+    def test_version_keying_separates_models(self):
+        rc = ResultCache()
+        rc.put(rc.key("same prompt", 8, "base"), "base out")
+        assert rc.peek(rc.key("same prompt", 8, "qsig:w8")) is None
+        rc.put(rc.key("same prompt", 8, "qsig:w8"), "w8 out")
+        assert rc.peek(rc.key("same prompt", 8, "base")) == "base out"
+        assert rc.peek(rc.key("same prompt", 8, "qsig:w8")) == "w8 out"
+
+
+class TestPrefixCache:
+    def test_lru_eviction_at_capacity(self):
+        pc = PrefixCache(capacity=2)
+        for i in range(3):
+            pc.put(pc.key([1, 2, i], "base"), state={"s": i}, prefix_len=3)
+        assert len(pc) == 2
+        assert pc.key([1, 2, 0], "base") not in pc
+        assert pc.key([1, 2, 2], "base") in pc
+
+    def test_get_hit_miss_accounting_and_refresh(self):
+        pc = PrefixCache(capacity=2)
+        k1 = pc.key([1], "base")
+        assert pc.get(k1) is None and pc.misses == 1
+        pc.put(k1, state=None, prefix_len=1)
+        pc.put(pc.key([2], "base"), state=None, prefix_len=1)
+        assert pc.get(k1) is not None and pc.hits == 1   # refreshes k1
+        pc.put(pc.key([3], "base"), state=None, prefix_len=1)
+        assert k1 in pc                                  # [2] evicted instead
+        assert pc.key([2], "base") not in pc
+
+    def test_version_invalidates_recompressed_model(self):
+        """The same template under a different model version must MISS:
+        a recompressed instance-optimized variant never decodes against
+        the base model's stored prefix activations."""
+        pc = PrefixCache()
+        ids = [1, 70, 71, 72]
+        pc.put(pc.key(ids, "base"), state="base-kv", prefix_len=4)
+        assert pc.get(pc.key(ids, "qsig:w8")) is None
+        e = pc.get(pc.key(ids, "base"))
+        assert e is not None and e.state == "base-kv"
+
+
+class TestBatcherPrefixGrouping:
+    def test_take_never_mixes_prefix_groups(self):
+        """Admission seeds one shared prefix state per batch, so take()
+        must group on (bucket, prefix_key) — the head defines both."""
+        b = Batcher(buckets=(8,))
+        ka, kb = ((1, 2), "base"), ((3, 4), "base")
+        for i, pk in enumerate([ka, ka, kb, ka]):
+            r = Request(rid=i, prompt_ids=[5, 6], max_new=4)
+            r.prefix_key = pk
+            b.add(r)
+        first = b.take(4)
+        assert [r.rid for r in first] == [0, 1, 3]     # all ka, FIFO
+        assert [r.rid for r in b.take(4)] == [2]
+
+
+@pytest.fixture(scope="module")
+def dense_tiny():
+    cfg = ModelConfig(name="tp", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=260,
+                      max_seq=256)
+    return cfg, api.init_params(jax.random.PRNGKey(0), cfg)
+
+
+PROMPTS = ["fix: pyton", "fix: javascrpt", "fix: golag", "fix: rst"]
+
+
+def _family_model(arch):
+    cfg = registry.get_reduced(arch).replace(vocab_size=260)
+    return cfg, api.init_params(jax.random.PRNGKey(0), cfg)
+
+
+class TestPrefixSharingExactness:
+    def _run(self, cfg, params, *, on):
+        eng = Engine(params, cfg, slots=2, max_len=64, buckets=(8, 16),
+                     use_prefix_cache=on)
+        outs = eng.generate(PROMPTS, max_new=8, prefix="fix: ")
+        return eng, outs
+
+    def test_dense_outputs_byte_identical(self, dense_tiny):
+        cfg, params = dense_tiny
+        off, o_off = self._run(cfg, params, on=False)
+        on, o_on = self._run(cfg, params, on=True)
+        assert o_on == o_off
+        assert off.stats.prefix_hits == 0
+        assert on.stats.prefix_hits > 0
+        assert on.stats.prefill_tokens_saved > 0
+        # the whole point: fewer prompt tokens through the trunk
+        assert on.stats.prefill_tokens < off.stats.prefill_tokens
+
+    @pytest.mark.parametrize("arch", ["qwen2-moe-a2.7b", "rwkv6-3b",
+                                      "zamba2-7b"])
+    def test_family_outputs_byte_identical(self, arch):
+        """moe / rwkv / hybrid: prefix seeding (KV scatter, recurrent
+        state resume, or both) reproduces full-prefill greedy outputs
+        exactly."""
+        cfg, params = _family_model(arch)
+        _, o_off = self._run(cfg, params, on=False)
+        on, o_on = self._run(cfg, params, on=True)
+        assert o_on == o_off
+        assert on.stats.prefix_hits > 0
+
+    def test_prefix_entry_reused_across_queries(self, dense_tiny):
+        cfg, params = dense_tiny
+        eng, _ = self._run(cfg, params, on=True)
+        pc = eng.prefix_cache
+        assert len(pc) == 1 and pc.misses == 1
+        eng.generate(["fix: habsjell"], max_new=6, prefix="fix: ")
+        assert len(pc) == 1 and pc.misses == 1         # same entry, no rebuild
+        # keys carry the engine's model version (invalidation-by-version)
+        (ids, version), = list(pc._d.keys())
+        assert version == eng.version
+
+    def test_mixed_prefix_and_plain_submissions(self, dense_tiny):
+        """Prefix and non-prefix requests interleave in one engine run;
+        admission batches never mix the two groups and outputs match a
+        prefix-free engine."""
+        cfg, params = dense_tiny
+        eng = Engine(params, cfg, slots=2, max_len=64, buckets=(8, 16),
+                     use_prefix_cache=True, use_result_cache=False)
+        reqs = [eng.submit("fix: pyton", max_new=6, prefix="fix: "),
+                eng.submit("no template here", max_new=6),
+                eng.submit("fix: golag", max_new=6, prefix="fix: ")]
+        eng.drain()
+        ref = Engine(params, cfg, slots=2, max_len=64, buckets=(8, 16),
+                     use_prefix_cache=False, use_result_cache=False)
+        want = ref.generate(["fix: pyton", "no template here",
+                             "fix: golag"], max_new=6)
+        assert [r.text for r in reqs] == want
+
+    def test_oversized_suffix_falls_back_to_full_path(self, dense_tiny):
+        """A suffix overflowing the ladder keeps the legacy truncation
+        semantics: the request takes the full-prompt path."""
+        cfg, params = dense_tiny
+        eng = Engine(params, cfg, slots=1, max_len=32, buckets=(16,),
+                     use_prefix_cache=True, use_result_cache=False)
+        req = eng.submit("fix: " + "z" * 200, max_new=2, prefix="fix: ")
+        assert req.prefix_key is None
+        eng.drain()
+        assert req.truncated and eng.stats.truncated == 1
+        assert eng.stats.prefix_hits == 0
+
+    def test_full_prompt_exceeding_top_bucket_still_truncates(self,
+                                                              dense_tiny):
+        """Regression: a LONG template + short suffix whose total
+        exceeds the top bucket must fall back (the off-path would clip
+        the template head, so splitting would silently change outputs)
+        — on and off stay byte-identical, both truncated."""
+        cfg, params = dense_tiny
+        template = "T" * 40 + ": "              # full prompt > top bucket 16
+        text = template + "abc"
+        outs = {}
+        for on in (False, True):
+            eng = Engine(params, cfg, slots=1, max_len=64, buckets=(16,),
+                         use_prefix_cache=on, use_result_cache=False)
+            req = eng.submit(text, max_new=4, prefix=template)
+            assert req.prefix_key is None
+            eng.drain()
+            assert req.truncated
+            outs[on] = req.text
+        assert outs[True] == outs[False]
+
+    def test_prefix_disabled_for_unsupported_family(self):
+        """encdec/vlm engines must silently take the full-prefill path."""
+        assert not api.supports_prefix(registry.get_reduced("whisper-base"))
+        assert not api.supports_prefix(registry.get_reduced("paligemma-3b"))
