@@ -58,11 +58,10 @@ def make_engine(params, cfg, tok, **kw) -> Engine:
 
 
 def slot_bytes(cfg, max_len: int = 160) -> int:
-    """Per-decode-slot state bytes (KV cache / recurrent state, batch=1)."""
-    cache = jax.eval_shape(lambda: api.init_cache(cfg, 1, max_len,
-                                                  compact_local=False))
-    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
-               for l in jax.tree.leaves(cache))
+    """Per-decode-slot state bytes (KV cache / recurrent state, batch=1);
+    single source of truth lives next to the ModelPool that budgets it."""
+    from repro.serving.scheduler import slot_state_bytes
+    return slot_state_bytes(cfg, max_len)
 
 
 def slots_for_budget(params, cfg, mem_budget: int, *, max_len: int = 160,

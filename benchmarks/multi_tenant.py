@@ -1,0 +1,231 @@
+"""Multi-tenant pool benchmark: aggregate rows/s vs tenant count under a
+fixed byte budget — the paper's parallelism-dividend claim, reproduced.
+
+  PYTHONPATH=src python benchmarks/multi_tenant.py [--smoke] [--json PATH]
+
+Each tenant runs the data-correction workload through its OWN
+instance-optimized model (distinct per-tenant prompt template ->
+distinct query signature -> distinct compressed instance), submitted to
+one shared ``ModelPool`` + ``Scheduler`` (serving/scheduler.py).  Two
+fleets compete under the SAME pool byte budget:
+
+  base   per-tenant *uncompressed* instances (the identity recipe —
+         stand-in for a full-precision specialized model): few fit,
+         extra tenants queue head-of-line and evicted engines must be
+         rebuilt (the swap cost shows up in the measured numbers)
+  iolm   per-tenant int8 instances: the compressed fleet packs 2-3x
+         more resident models into the identical budget, so more
+         tenants make progress simultaneously
+
+Reported per (fleet, tenant-count) cell:
+
+  rows/s      measured end-to-end scheduler throughput on this host
+              (CPU: includes engine-rebuild/swap cost for overflow
+              tenants — the thrash is part of the story)
+  v5e rows/s  roofline-projected aggregate on the TPU v5e target:
+              each *concurrently resident* engine is projected as an
+              independent accelerator partition (the byte budget is
+              the fleet's HBM allocation), so the projection grows
+              with resident-model count and plateaus at the budget's
+              capacity — the number the serial CPU container cannot
+              measure but the artifact sizes determine
+  resident    models resident at steady state / evictions during run
+
+Assertions (the acceptance bar): the iolm fleet's projected aggregate
+grows with tenant count until the budget is full, beats the base fleet
+at >= 4 tenants, and every tenant's greedy outputs are byte-identical
+to running that tenant alone on a private single-model engine.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import Csv, load_model, v5e_decode_rows_per_s
+from repro.core.pipeline import Recipe
+from repro.olap.query import IOLMSession
+from repro.serving.engine import Engine, EngineStats
+from repro.serving.scheduler import Scheduler, slot_state_bytes
+from repro.training import data as D
+
+MAX_NEW = 8
+ENGINE_KW = dict(slots=4, max_len=128, buckets=(24, 96))
+SHARE = 4
+
+FLEETS = {
+    # per-tenant full-precision instance: the identity recipe keeps the
+    # weights untouched but versions the model per query, so the pool
+    # must hold one full-size engine per tenant
+    "base": [Recipe(name="identity")],
+    "iolm": [Recipe(name="w8", wbits=8, quant_method="absmax")],
+}
+
+
+def tenant_workload(i: int, n_rows: int):
+    """Distinct template per tenant -> distinct qsig -> distinct model;
+    unique row suffixes keep the result cache out of this story."""
+    tmpl = (f"tenant-{i} data cleaning: reply with only the canonical "
+            f"category for value: ")
+    rows = D.workload_rows("correct", n_rows, seed=100 + i)
+    prompts = [f"{tmpl}{r.text}#{j}" for j, r in enumerate(rows)]
+    return tmpl, prompts
+
+
+def make_session(params, cfg, tok, recipes, budget) -> IOLMSession:
+    return IOLMSession(params, cfg, tokenizer=tok, recipes=recipes,
+                       calib_rows=8, eval_rows=4,
+                       engine_kw=dict(ENGINE_KW), pool_budget=budget)
+
+
+def submit_all(sess, n_tenants, n_rows) -> list:
+    sched = Scheduler(sess.pool, share=SHARE)
+    subs = []
+    for i in range(n_tenants):
+        tmpl, prompts = tenant_workload(i, n_rows)
+        subs.append(sched.submit(f"t{i}", prompts, qsig=f"t{i}",
+                                 probe=prompts[:12], max_new=MAX_NEW,
+                                 prefix=tmpl))
+    return sched, subs
+
+
+def run_cell(params, cfg, tok, recipes, budget, n_tenants, n_rows):
+    """One (fleet, tenant-count) cell: warmup pass (optimize + compile),
+    then a timed pass on the warm pool."""
+    sess = make_session(params, cfg, tok, recipes, budget)
+    sched, _ = submit_all(sess, n_tenants, n_rows)
+    sched.run()
+    for entry in sess.pool._entries.values():          # steady state
+        if entry.engine.result_cache is not None:
+            entry.engine.result_cache.clear()
+        entry.engine.stats = EngineStats()
+    ev0 = sess.pool.stats.evictions        # report the timed pass only
+    t0 = time.time()
+    sched, subs = submit_all(sess, n_tenants, n_rows)
+    sched.run()
+    dt = time.time() - t0
+    total_rows = sum(len(s.results()) for s in subs)
+    assert total_rows == n_tenants * n_rows
+    pool = sess.pool
+    resident = [e.engine for e in pool._entries.values()]
+    projected = sum(v5e_decode_rows_per_s(e.params, e.cfg, e.slots, MAX_NEW,
+                                          max_len=ENGINE_KW["max_len"])
+                    for e in resident)
+    return dict(sess=sess, subs=subs, rows_per_s=total_rows / dt,
+                projected=projected, resident=len(resident),
+                resident_bytes=pool.resident_bytes,
+                evictions=pool.stats.evictions - ev0,
+                ticks=sched.stats.ticks)
+
+
+def check_byte_identical(cell, n_rows) -> bool:
+    """Every tenant's scheduler outputs must equal a private serial
+    single-engine run of the same model — interleaving changes the
+    schedule, never the tokens."""
+    sess = cell["sess"]
+    for sub in cell["subs"]:
+        tmpl, prompts = tenant_workload(int(sub.tenant[1:]), n_rows)
+        m = sess._optimize(sub.qsig, sub.probe)        # ModelCache hit
+        eng = Engine(m.params, m.cfg, tokenizer=sess.tok,
+                     version=m.version, **ENGINE_KW)
+        ref = eng.generate_stream(iter(prompts), max_new=MAX_NEW,
+                                  prefix=tmpl)
+        assert sub.results() == ref, \
+            f"{sub.tenant}: scheduler outputs diverge from serial run"
+    return True
+
+
+def main(csv: Csv | None = None, *, smoke: bool = False,
+         json_path: str | None = None) -> dict:
+    csv = csv or Csv()
+    cfg, params, tok = load_model()
+    n_rows = 8 if smoke else 16
+    tenant_grid = (1, 2, 4) if smoke else (1, 2, 4, 8)
+
+    # Budget: ~2.7 full-precision engines -> 2 base instances fit while
+    # the int8 fleet packs 4+.  Derived from real artifact sizes, not
+    # hard-coded.
+    from repro.core.compressed import param_bytes
+    base_entry = (param_bytes(params)
+                  + ENGINE_KW["slots"] * slot_state_bytes(
+                      cfg, ENGINE_KW["max_len"]))
+    budget = int(2.7 * base_entry)
+
+    print(f"\n=== Multi-tenant pool ({n_rows} rows/tenant, budget "
+          f"{budget / 1e6:.1f} MB ~ 2.7 base engines) ===")
+    print(f"{'fleet':5s} {'tenants':>7s} {'rows/s':>7s} {'v5e r/s':>9s} "
+          f"{'resident':>8s} {'MB':>6s} {'evict':>5s} {'ticks':>6s}")
+    cells: dict = {}
+    for fleet, recipes in FLEETS.items():
+        for n in tenant_grid:
+            c = run_cell(params, cfg, tok, recipes, budget, n, n_rows)
+            cells[(fleet, n)] = c
+            print(f"{fleet:5s} {n:7d} {c['rows_per_s']:7.2f} "
+                  f"{c['projected']:9.0f} {c['resident']:8d} "
+                  f"{c['resident_bytes'] / 1e6:6.2f} {c['evictions']:5d} "
+                  f"{c['ticks']:6d}")
+            csv.add(f"multi_tenant/{fleet}_t{n}",
+                    1e6 / max(c["rows_per_s"], 1e-9),
+                    f"v5e={c['projected']:.0f};resident={c['resident']};"
+                    f"evict={c['evictions']}")
+
+    # --- the acceptance bar -------------------------------------------
+    # 1. compression packs strictly more resident models into the budget
+    nmax = tenant_grid[-1]
+    assert cells[("iolm", nmax)]["resident"] \
+        > cells[("base", nmax)]["resident"], \
+        "compressed fleet should fit more resident models"
+    # 2. projected aggregate grows with tenant count while models fit
+    proj = [cells[("iolm", n)]["projected"] for n in tenant_grid]
+    res = [cells[("iolm", n)]["resident"] for n in tenant_grid]
+    for a, b in zip(range(len(proj) - 1), range(1, len(proj))):
+        if res[b] > res[a]:            # still under budget: must grow
+            assert proj[b] > proj[a], \
+                f"projected aggregate did not grow: {proj}"
+    # 3. the compressed fleet wins at >= 4 tenants
+    for n in [t for t in tenant_grid if t >= 4]:
+        assert cells[("iolm", n)]["projected"] \
+            > cells[("base", n)]["projected"], \
+            f"iolm fleet should beat base fleet at {n} tenants"
+        if cells[("iolm", n)]["rows_per_s"] \
+                <= cells[("base", n)]["rows_per_s"]:
+            print(f"[multi_tenant] note: measured rows/s at {n} tenants "
+                  f"did not beat base on this host (CPU serializes "
+                  f"engines; the v5e projection is the headline axis)")
+    # 4. per-tenant outputs byte-identical to serial execution
+    ident = check_byte_identical(cells[("iolm", 2)], n_rows)
+    check_byte_identical(cells[("base", 2)], n_rows)
+    print("[multi_tenant] per-tenant outputs byte-identical to serial "
+          "single-engine runs")
+
+    result = {
+        "smoke": smoke, "budget": budget, "rows_per_tenant": n_rows,
+        "cells": [
+            {"fleet": f, "tenants": n, "rows_per_s": c["rows_per_s"],
+             "v5e_rows_per_s": c["projected"], "resident": c["resident"],
+             "resident_bytes": c["resident_bytes"],
+             "evictions": c["evictions"]}
+            for (f, n), c in cells.items()],
+        "outputs_identical": ident,
+        "csv": csv.lines,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"[multi_tenant] wrote {json_path}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grid (fewer tenants, fewer rows)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write measured cells as a JSON artifact")
+    args = ap.parse_args()
+    main(smoke=args.smoke, json_path=args.json)

@@ -5,6 +5,8 @@
   runtime_opts caching + batching gains (paper §3.3)
   serving      async core grid: rows/s + slot utilization vs slots x
                buckets x sampler, base vs int8
+  multi_tenant aggregate rows/s vs tenant count under a fixed pool byte
+               budget, per-tenant base vs instance-optimized fleets
   roofline     dry-run roofline table (§Roofline; needs results/dryrun.json)
 
 Prints ``name,us_per_call,derived`` CSV lines throughout.
@@ -17,7 +19,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def main() -> None:
-    from benchmarks import ablation, roofline, runtime_opts, serving, table1
+    from benchmarks import (ablation, multi_tenant, roofline, runtime_opts,
+                            serving, table1)
     from benchmarks.common import Csv
     csv = Csv()
     print("== IOLM-DB benchmark suite ==")
@@ -25,6 +28,7 @@ def main() -> None:
     ablation.main(csv)
     runtime_opts.main(csv)
     serving.main(csv)
+    multi_tenant.main(csv)
     roofline.main(csv)
     print("\n== CSV summary ==")
     for line in csv.lines:

@@ -17,17 +17,18 @@ from __future__ import annotations
 
 import hashlib
 import time
-from dataclasses import dataclass, field
+from collections import OrderedDict
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.pipeline import InstanceOptimizer, Recipe
 from repro.core import policy as POL
 from repro.olap import operators as OPS
 from repro.olap.table import Table
 from repro.serving.engine import Engine
+from repro.serving.scheduler import ModelPool
 from repro.training.data import ByteTokenizer, PROMPTS
 
 
@@ -41,37 +42,80 @@ class OptimizedModel:
 
 
 class ModelCache:
-    """(query signature, data signature) -> compressed model."""
+    """(query signature, data signature) -> compressed model.
 
-    def __init__(self):
-        self._d: Dict[Tuple[str, str], OptimizedModel] = {}
+    LRU with a capacity cap: a multi-tenant session sees an unbounded
+    stream of (query, data) pairs, and each entry holds a full
+    compressed parameter set — without eviction the cache would grow
+    with tenant count forever.
+    """
+
+    def __init__(self, capacity: int = 32):
+        self.capacity = capacity
+        self._d: "OrderedDict[Tuple[str, str], OptimizedModel]" = \
+            OrderedDict()
         self.hits = 0
+        self.evictions = 0
 
     @staticmethod
     def data_signature(values: List[str], k: int = 64) -> str:
+        """Order-sensitive digest of a value sample.
+
+        Collision-resistant beyond the head: mixes in the total value
+        count, a tail sample (columns often share a head — e.g. sorted
+        or defaulted values — and differ late), and each value's length
+        so that truncated long values with a common 256-char prefix
+        still separate.
+        """
         h = hashlib.sha256()
-        for v in values[:k]:
-            h.update(str(v)[:128].encode())
+        h.update(f"n={len(values)}".encode())
+        sample = list(values[:k])
+        if len(values) > k:
+            sample += list(values[-k:])
+        for v in sample:
+            s = str(v)
+            h.update(f"|{len(s)}:".encode())
+            h.update(s[:256].encode())
         return h.hexdigest()[:16]
 
     def get(self, qsig: str, dsig: str) -> Optional[OptimizedModel]:
         m = self._d.get((qsig, dsig))
         if m is not None:
+            self._d.move_to_end((qsig, dsig))
             self.hits += 1
         return m
 
     def put(self, qsig: str, dsig: str, m: OptimizedModel) -> None:
         self._d[(qsig, dsig)] = m
+        self._d.move_to_end((qsig, dsig))
+        if len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._d)
 
 
 class IOLMSession:
-    """Holds the base model + optimization machinery across queries."""
+    """Holds the base model + optimization machinery across queries.
+
+    With ``pool_budget`` set (or an explicit ``pool``), the session
+    stops building a private engine per operator and instead draws
+    engines from a shared byte-budgeted ``ModelPool``
+    (serving/scheduler.py): engines persist across queries (jit
+    executables and caches are reused), many tenants' compressed
+    models co-reside under one budget, and identical (model-version,
+    prompt) work dedups across tenants through each pooled engine's
+    result cache.
+    """
 
     def __init__(self, params, cfg, *, tokenizer: Optional[ByteTokenizer] = None,
                  objective: str = "perf", acc_floor: float = 0.9,
                  recipes: Optional[List[Recipe]] = None,
                  calib_rows: int = 16, eval_rows: int = 8,
-                 engine_kw: Optional[Dict] = None):
+                 engine_kw: Optional[Dict] = None,
+                 pool_budget: Optional[int] = None,
+                 pool: Optional[ModelPool] = None):
         self.params = params
         self.cfg = cfg
         self.tok = tokenizer or ByteTokenizer(max(cfg.vocab_size, 260))
@@ -83,13 +127,21 @@ class IOLMSession:
         self.model_cache = ModelCache()
         self.engine_kw = engine_kw or {}
         self.log: List[str] = []
+        self.pool = pool
+        if self.pool is None and pool_budget is not None:
+            self.pool = ModelPool(self, pool_budget,
+                                  engine_kw=self.engine_kw)
 
     # -- engines --------------------------------------------------------
     def base_engine(self) -> Engine:
+        if self.pool is not None:
+            return self.pool.engine_for("base", optimize=False)
         return Engine(self.params, self.cfg, tokenizer=self.tok,
                       version="base", **self.engine_kw)
 
     def optimized_engine(self, qsig: str, prompts: List[str]) -> Engine:
+        if self.pool is not None:
+            return self.pool.engine_for(qsig, prompts, optimize=True)
         m = self._optimize(qsig, prompts)
         return Engine(m.params, m.cfg, tokenizer=self.tok,
                       version=m.version, **self.engine_kw)
@@ -125,9 +177,14 @@ class IOLMSession:
             m = OptimizedModel(self.params, self.cfg, None,
                                Recipe(name="identity"), "base")
         else:
+            # the version carries the DATA signature too: compression is
+            # calibration-dependent, so same-prompt queries over
+            # different data are different models — pool residency,
+            # result-cache and prefix-cache keys must never collapse
+            # them onto one tenant's params
             m = OptimizedModel(pick.params, pick.cfg, pick.report,
                                pick.recipe,
-                               f"{qsig}:{pick.recipe.name}")
+                               f"{qsig}:{dsig}:{pick.recipe.name}")
             self.log.append(
                 f"[iolm] {qsig}: picked {pick.recipe.name} "
                 f"acc={pick.result.accuracy:.2f} "
@@ -183,49 +240,90 @@ class Query:
         base = f"{op.kind}:{op.kwargs.get('prompt', '')}"
         return hashlib.sha256(base.encode()).hexdigest()[:12]
 
-    def run(self) -> Table:
+    def _probe(self, t: Table, op: _Op) -> List[str]:
+        """Bounded calibration sample for the operator (the optimizer
+        reads at most calib+eval rows and a 64-row data signature); the
+        full column streams through the engine chunk-wise inside the
+        operator, never materialized as prompts here."""
+        n_probe = max(64, self.session.calib_rows + self.session.eval_rows)
+        if op.kind == "join":
+            return [f"{op.kwargs['prompt']}{a} | {b}"
+                    for a in t[op.kwargs["on"][0]][:32]
+                    for b in op.kwargs["right"][op.kwargs["on"][1]][:2]]
+        return [op.kwargs["prompt"] + str(v)
+                for v in t[op.kwargs["col"]][:n_probe]]
+
+    def _spec(self, t: Table, op: _Op) -> OPS.OpSpec:
+        if op.kind == "map":
+            return OPS.map_spec(t, op.kwargs["col"],
+                                prompt=op.kwargs["prompt"],
+                                out_col=op.kwargs["out_col"],
+                                max_new=op.kwargs["max_new"])
+        if op.kind == "correct":
+            return OPS.correct_spec(t, op.kwargs["col"],
+                                    prompt=op.kwargs["prompt"],
+                                    out_col=op.kwargs["out_col"],
+                                    max_new=op.kwargs["max_new"])
+        if op.kind == "join":
+            return OPS.join_spec(t, op.kwargs["right"], op.kwargs["on"],
+                                 prompt=op.kwargs["prompt"],
+                                 max_new=op.kwargs["max_new"])
+        raise ValueError(f"unknown LLM operator kind {op.kind!r}")
+
+    def _ops(self):
+        """The plan as a coroutine of LLM-operator submissions.
+
+        Yields ``(qsig, probe, OpSpec)`` per LLM operator and expects
+        the executor to ``send`` back the output rows; filters run
+        inline.  Returns (via StopIteration.value) the final Table.
+        Both executors drive this one generator: ``run()`` serially,
+        and ``Scheduler.run_queries`` interleaving many tenants' plans
+        concurrently.
+        """
         t = self.table
         for op in self._plan:
             if op.kind == "filter":
                 t = t.filter(op.kwargs["pred"])
                 continue
-            # --- LLM operator interception ---
-            # The probe is a bounded calibration sample (the optimizer
-            # reads at most calib+eval rows and a 64-row data signature);
-            # the full column streams through the engine chunk-wise
-            # inside the operator, never materialized as prompts here.
-            n_probe = max(64, self.session.calib_rows
-                          + self.session.eval_rows)
-            if op.kind == "join":
-                probe = [f"{op.kwargs['prompt']}{a} | {b}"
-                         for a in t[op.kwargs["on"][0]][:32]
-                         for b in op.kwargs["right"][op.kwargs["on"][1]][:2]]
-            else:
-                probe = [op.kwargs["prompt"] + str(v)
-                         for v in t[op.kwargs["col"]][:n_probe]]
-            engine = (self.session.optimized_engine(self._qsig(op), probe)
-                      if self.optimize else self.session.base_engine())
-            if op.kind == "map":
-                t = OPS.llm_map(t, op.kwargs["col"], engine,
-                                prompt=op.kwargs["prompt"],
-                                out_col=op.kwargs["out_col"],
-                                max_new=op.kwargs["max_new"])
-            elif op.kind == "correct":
-                t = OPS.llm_correct(t, op.kwargs["col"], engine,
-                                    prompt=op.kwargs["prompt"],
-                                    out_col=op.kwargs["out_col"],
-                                    max_new=op.kwargs["max_new"])
-            elif op.kind == "join":
-                t = OPS.llm_join(t, op.kwargs["right"], op.kwargs["on"],
-                                 engine, prompt=op.kwargs["prompt"],
-                                 max_new=op.kwargs["max_new"])
-            st = getattr(engine, "stats", None)
-            if st is not None and getattr(st, "prefix_hits", 0):
-                # the compressed variant's prefix entries are keyed by
-                # engine.version, so a recompression never reuses stale
-                # prefix state — hits here are same-version by construction
-                self.session.log.append(
-                    f"[prefix] {op.kind}: {st.prefix_hits} rows seeded "
-                    f"from shared prefix, {st.prefill_tokens_saved} "
-                    f"prefill tokens saved (v={engine.version})")
+            spec = self._spec(t, op)
+            outs = yield self._qsig(op), self._probe(t, op), spec
+            t = spec.finish(outs)
         return t
+
+    def _log_prefix_savings(self, engine, kind: str, hits0: int,
+                            saved0: int) -> None:
+        """Pooled engines persist across queries, so savings are logged
+        as deltas over this operator, not lifetime engine totals."""
+        st = getattr(engine, "stats", None)
+        if st is None:
+            return
+        hits = getattr(st, "prefix_hits", 0) - hits0
+        saved = getattr(st, "prefill_tokens_saved", 0) - saved0
+        if hits > 0:
+            # the compressed variant's prefix entries are keyed by
+            # engine.version, so a recompression never reuses stale
+            # prefix state — hits here are same-version by construction
+            self.session.log.append(
+                f"[prefix] {kind}: {hits} rows seeded from shared "
+                f"prefix, {saved} prefill tokens saved "
+                f"(v={engine.version})")
+
+    def run(self) -> Table:
+        """Serial execution: drive the plan coroutine op by op through
+        the session's engines (pooled when the session has a
+        ModelPool, private otherwise)."""
+        gen = self._ops()
+        send = None
+        while True:
+            try:
+                qsig, probe, spec = gen.send(send)
+            except StopIteration as stop:
+                return stop.value
+            engine = (self.session.optimized_engine(qsig, probe)
+                      if self.optimize else self.session.base_engine())
+            st = getattr(engine, "stats", None)
+            hits0 = getattr(st, "prefix_hits", 0) if st else 0
+            saved0 = getattr(st, "prefill_tokens_saved", 0) if st else 0
+            send = OPS._invoke(engine, spec.prompts, max_new=spec.max_new,
+                               prefix=spec.prefix)
+            self._log_prefix_savings(engine, spec.kind, hits0, saved0)

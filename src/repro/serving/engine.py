@@ -98,6 +98,7 @@ class Engine:
                  buckets: Sequence[int] = (32, 64, 128),
                  use_result_cache: bool = True, version: str = "base",
                  use_prefix_cache: bool = True,
+                 prefix_cache: Optional[PrefixCache] = None,
                  extra_inputs: Optional[Dict] = None,
                  sampling: Optional[SamplingConfig] = None):
         self.params = params
@@ -115,10 +116,14 @@ class Engine:
         self.version = version
         # prefix sharing needs a family that can seed per-row state from a
         # stored prompt prefix, and no extra per-row inputs (img/enc) that
-        # would sit ahead of the text tokens
-        self.prefix_cache = (PrefixCache()
-                             if use_prefix_cache and api.supports_prefix(cfg)
-                             and not (extra_inputs or {}) else None)
+        # would sit ahead of the text tokens.  ``prefix_cache`` lets a
+        # ModelPool share ONE cache across its resident engines — entries
+        # stay isolated per model because every key includes the engine's
+        # version (scheduler.py; leak-tested in tests/test_scheduler.py).
+        self.prefix_cache = (
+            (prefix_cache if prefix_cache is not None else PrefixCache())
+            if use_prefix_cache and api.supports_prefix(cfg)
+            and not (extra_inputs or {}) else None)
         self._prefix_ids_memo: Dict[str, tuple] = {}
         self.batcher = Batcher(self.buckets)
         self.stats = EngineStats()
@@ -389,10 +394,16 @@ class Engine:
                 finished.extend(self._retire(r))
         return finished
 
+    def has_work(self) -> bool:
+        """True while any request is queued or actively decoding — the
+        scheduler's cheap should-I-tick-this-engine probe (a bare
+        ``step()`` on an idle engine would still allocate slot state)."""
+        return bool(len(self.batcher) or self._active)
+
     def drain(self) -> List[Request]:
         """Tick until every queued and active request has finished."""
         finished: List[Request] = []
-        while len(self.batcher) or self._active:
+        while self.has_work():
             finished.extend(self.step())
         return finished
 

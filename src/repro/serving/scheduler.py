@@ -1,0 +1,454 @@
+"""Multi-tenant serving: byte-budgeted model residency + fair scheduling.
+
+The paper's headline systems claim is that instance-optimization
+"enables higher parallelism on existing hardware": a compressed
+per-query model is small enough that *many* specialized instances
+co-reside in the memory where one base model fit, so concurrent OLAP
+queries from different tenants run simultaneously instead of queueing
+behind a single engine.  This module supplies the two pieces that turn
+the single-model async engine (engine.py) into that fleet:
+
+``ModelPool``
+    Byte-budgeted residency of per-query compressed models.  An entry
+    is one resident ``Engine`` (model params + its decode-slot state);
+    ``engine_for(qsig, probe)`` returns the resident engine for the
+    query's optimized model, re-running the instance-optimization
+    workflow through the owning ``IOLMSession`` on a miss (the
+    session's ``ModelCache`` makes an evicted-but-remembered model
+    cheap to re-admit: only the engine is rebuilt, not the compression
+    search).  Residency is LRU with pin counts — engines with live
+    scheduler work are never evicted — and the byte budget is a hard
+    invariant: an admission evicts least-recently-used unpinned
+    entries first and fails rather than overshoot.  All resident
+    engines share one ``PrefixCache`` keyed by (template tokens, model
+    version), so tenants on different compressed models can never
+    collide on prefilled state while tenants on the *same* model share
+    it.
+
+``Scheduler``
+    Fair-share round-robin interleaving of ``Engine.step()`` across
+    the pool's resident engines.  A ``Submission`` is one tenant's
+    prompt stream bound for one model; every scheduler tick tops each
+    active submission up to ``share`` in-flight rows (round-robin, so
+    no tenant starves at admission) and then runs one decode tick on
+    every engine that has work.  Tenants whose prompts and model
+    version coincide dedup through the shared engine's result cache
+    and leader/follower path — identical work is decoded once across
+    the whole fleet.  Greedy outputs are byte-identical to running
+    each submission alone on a private engine: per-slot decode state
+    is independent, so interleaving changes only the schedule, never
+    the tokens (property-tested in tests/test_property.py).
+
+``Scheduler.run_queries`` drives whole OLAP query *plans* (not just
+prompt streams) concurrently: each ``Query`` exposes its plan as a
+coroutine of operator submissions, and the scheduler interleaves the
+operators of all tenants' queries while respecting each plan's own
+sequential dependencies.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, Iterable, Iterator, List, Optional,
+                    Set, Tuple)
+
+import jax
+import numpy as np
+
+from repro.core.compressed import param_bytes
+from repro.models import api
+from repro.serving.cache import PrefixCache
+from repro.serving.engine import Engine
+
+
+def slot_state_bytes(cfg, max_len: int) -> int:
+    """Per-decode-slot state bytes (KV cache / recurrent state, batch=1),
+    computed from shapes only — no allocation."""
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, 1, max_len,
+                                                  compact_local=False))
+    return sum(int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(cache))
+
+
+class PoolBudgetError(RuntimeError):
+    """Raised when an admission cannot fit inside the byte budget.
+
+    ``retryable`` distinguishes "blocked by pinned residents, wait for
+    a pin to release" (the scheduler queues the submission) from "the
+    model alone exceeds the budget, it can never fit" (always raised
+    through to the caller).
+    """
+
+    def __init__(self, msg: str, *, retryable: bool):
+        super().__init__(msg)
+        self.retryable = retryable
+
+
+@dataclass
+class _BaseModel:
+    """Duck-typed OptimizedModel for the un-optimized (base) path."""
+    params: Any
+    cfg: Any
+    version: str = "base"
+
+
+@dataclass
+class PoolEntry:
+    engine: Engine
+    nbytes: int
+    hits: int = 0
+
+
+@dataclass
+class PoolStats:
+    hits: int = 0            # engine_for served by a resident engine
+    misses: int = 0          # engine (re)built — optimize and/or admit
+    evictions: int = 0
+    peak_resident_models: int = 0
+    peak_resident_bytes: int = 0
+
+
+class ModelPool:
+    """Byte-budgeted LRU residency of per-query (compressed) engines.
+
+    ``session`` is duck-typed: the pool needs ``session._optimize(qsig,
+    probe) -> model`` (with ``.params/.cfg/.version``), ``session.params``
+    / ``session.cfg`` for the base path, and ``session.tok``.
+    ``engine_factory`` / ``entry_bytes`` are injection points for tests
+    and alternate backends; the defaults build a real ``Engine`` and
+    charge it ``param_bytes(model) + slots * slot_state_bytes(cfg)``.
+    """
+
+    def __init__(self, session, byte_budget: int, *,
+                 engine_kw: Optional[Dict] = None,
+                 prefix_capacity: int = 32,
+                 engine_factory: Optional[Callable] = None,
+                 entry_bytes: Optional[Callable] = None):
+        self.session = session
+        self.byte_budget = int(byte_budget)
+        self.engine_kw = dict(engine_kw or {})
+        self.prefix_cache = PrefixCache(capacity=prefix_capacity)
+        self._engine_factory = engine_factory or self._default_factory
+        self._entry_bytes = entry_bytes or self._default_bytes
+        self._entries: "OrderedDict[str, PoolEntry]" = OrderedDict()
+        self._pins: Dict[str, int] = {}
+        self.stats = PoolStats()
+        self.eviction_log: List[str] = []
+
+    # -- defaults -------------------------------------------------------
+    def _default_factory(self, model) -> Engine:
+        return Engine(model.params, model.cfg, tokenizer=self.session.tok,
+                      version=model.version, prefix_cache=self.prefix_cache,
+                      **self.engine_kw)
+
+    def _default_bytes(self, model) -> int:
+        slots = self.engine_kw.get("slots", 8)
+        max_len = self.engine_kw.get("max_len", 256)
+        return (param_bytes(model.params)
+                + slots * slot_state_bytes(model.cfg, max_len))
+
+    # -- residency ------------------------------------------------------
+    @property
+    def resident_bytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    @property
+    def resident_versions(self) -> List[str]:
+        return list(self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def pin(self, version: str) -> None:
+        self._pins[version] = self._pins.get(version, 0) + 1
+
+    def unpin(self, version: str) -> None:
+        n = self._pins.get(version, 0) - 1
+        if n <= 0:
+            self._pins.pop(version, None)
+        else:
+            self._pins[version] = n
+
+    def pinned(self, version: str) -> bool:
+        return self._pins.get(version, 0) > 0
+
+    def resolve(self, qsig: str, probe: Iterable[str] = (), *,
+                optimize: bool = True):
+        """The query's model (optimizing on first sight), WITHOUT
+        admitting an engine — callers that may need to retry admission
+        (budget pinned full) resolve once and re-``admit`` the memoized
+        model instead of re-running the optimization lookup per try."""
+        return (self.session._optimize(qsig, list(probe)) if optimize
+                else _BaseModel(self.session.params, self.session.cfg))
+
+    def admit(self, model) -> Engine:
+        """Resident engine for ``model``, building one on miss.  Raises
+        PoolBudgetError instead of exceeding the budget; a *retryable*
+        refusal (pinned residents block the room) evicts nothing — warm
+        engines are only sacrificed for admissions that will succeed."""
+        entry = self._entries.get(model.version)
+        if entry is not None:
+            self._entries.move_to_end(model.version)
+            entry.hits += 1
+            self.stats.hits += 1
+            return entry.engine
+        need = int(self._entry_bytes(model))
+        if need > self.byte_budget:
+            raise PoolBudgetError(
+                f"model {model.version!r} needs {need} bytes but the pool "
+                f"budget is {self.byte_budget}", retryable=False)
+        pinned_bytes = sum(e.nbytes for v, e in self._entries.items()
+                           if self.pinned(v))
+        if pinned_bytes + need > self.byte_budget:
+            raise PoolBudgetError(
+                f"cannot admit {model.version!r} ({need} bytes): "
+                f"{pinned_bytes} bytes pinned by live submissions",
+                retryable=True)
+        self._evict_until(self.byte_budget - need)
+        engine = self._engine_factory(model)
+        self._entries[model.version] = PoolEntry(engine=engine, nbytes=need)
+        self.stats.misses += 1
+        self.stats.peak_resident_models = max(self.stats.peak_resident_models,
+                                              len(self._entries))
+        self.stats.peak_resident_bytes = max(self.stats.peak_resident_bytes,
+                                             self.resident_bytes)
+        return engine
+
+    def engine_for(self, qsig: str, probe: Iterable[str] = (), *,
+                   optimize: bool = True) -> Engine:
+        """``resolve`` + ``admit`` in one call (the no-retry path)."""
+        return self.admit(self.resolve(qsig, probe, optimize=optimize))
+
+    def _evict_until(self, budget: int) -> None:
+        """Evict least-recently-used unpinned entries until resident
+        bytes fit in ``budget``; deterministic (LRU order)."""
+        while self.resident_bytes > budget:
+            victim = next((v for v in self._entries if not self.pinned(v)),
+                          None)
+            if victim is None:
+                return
+            del self._entries[victim]
+            self.stats.evictions += 1
+            self.eviction_log.append(victim)
+
+
+# ---------------------------------------------------------------------------
+# fair-share scheduling
+# ---------------------------------------------------------------------------
+
+_EXHAUSTED = object()
+
+
+@dataclass
+class Submission:
+    """One tenant's prompt stream bound for one model."""
+    tenant: str
+    prompts: Iterator[str]
+    qsig: str
+    probe: List[str]
+    max_new: int
+    prefix: Optional[str]
+    optimize: bool
+    engine: Optional[Engine] = None
+    model: Any = None            # resolved once; re-admitted on retries
+    error: Optional[BaseException] = None   # terminal admission failure
+    reqs: List = field(default_factory=list)
+    inflight: Set[int] = field(default_factory=set)
+    exhausted: bool = False
+    peak_inflight: int = 0
+    first_done_tick: Optional[int] = None
+    last_done_tick: Optional[int] = None
+
+    @property
+    def active(self) -> bool:
+        return self.engine is not None
+
+    @property
+    def done(self) -> bool:
+        if self.error is not None:
+            return True
+        return self.active and self.exhausted and not self.inflight
+
+    def results(self) -> List[str]:
+        """Decoded rows in prompt order; re-raises this submission's
+        terminal error (e.g. its model can never fit the pool budget)
+        at the consumer instead of aborting unrelated tenants' work."""
+        if self.error is not None:
+            raise self.error
+        return [r.text for r in self.reqs]
+
+
+@dataclass
+class SchedulerStats:
+    ticks: int = 0
+    rows: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def rows_per_s(self) -> float:
+        return self.rows / self.wall_s if self.wall_s else 0.0
+
+
+class Scheduler:
+    """Interleaves ``Engine.step()`` across the pool's engines.
+
+    ``share`` bounds each submission's un-finished rows: every tick
+    tops every active submission up to ``share`` (round-robin rotation
+    so admission order is fair), then runs one decode tick per engine
+    with work.  Submissions whose model cannot become resident yet
+    (budget full of pinned engines) wait in FIFO order and activate as
+    pins release — head-of-line activation, so waiting is starvation-
+    free too.
+    """
+
+    def __init__(self, pool: ModelPool, *, share: int = 8):
+        self.pool = pool
+        self.share = max(1, share)
+        self.pending: "deque[Submission]" = deque()
+        self.active: List[Submission] = []
+        self.finished: List[Submission] = []
+        self.stats = SchedulerStats()
+        self.trace: List[Tuple[int, str]] = []   # (tick, tenant) per row
+        self._owners: Dict[Tuple[int, int], Submission] = {}
+        self._rr = 0
+
+    # -- submission -----------------------------------------------------
+    def submit(self, tenant: str, prompts: Iterable[str], *, qsig: str,
+               probe: Optional[Iterable[str]] = None, max_new: int = 16,
+               prefix: Optional[str] = None,
+               optimize: bool = True) -> Submission:
+        """Enqueue one tenant's prompt stream; prompts are consumed
+        lazily as the scheduler admits them."""
+        sub = Submission(tenant=tenant, prompts=iter(prompts), qsig=qsig,
+                         probe=list(probe or []), max_new=max_new,
+                         prefix=prefix, optimize=optimize)
+        self.pending.append(sub)
+        self._activate()
+        return sub
+
+    def _activate(self) -> None:
+        """FIFO head-of-line activation of pending submissions."""
+        while self.pending:
+            sub = self.pending[0]
+            try:
+                if sub.model is None:       # optimize exactly once
+                    sub.model = self.pool.resolve(sub.qsig, sub.probe,
+                                                  optimize=sub.optimize)
+                engine = self.pool.admit(sub.model)
+            except PoolBudgetError as e:
+                if not e.retryable:
+                    # this submission can NEVER fit: fail it alone (the
+                    # error surfaces from its results()) and keep
+                    # scheduling everyone else
+                    self.pending.popleft()
+                    sub.error = e
+                    self.finished.append(sub)
+                    continue
+                return          # budget full of pinned engines: wait
+            self.pool.pin(engine.version)
+            sub.engine = engine
+            self.active.append(sub)
+            self.pending.popleft()
+
+    # -- the tick -------------------------------------------------------
+    def _top_up(self, sub: Submission) -> None:
+        while len(sub.inflight) < self.share and not sub.exhausted:
+            p = next(sub.prompts, _EXHAUSTED)
+            if p is _EXHAUSTED:
+                sub.exhausted = True
+                break
+            r = sub.engine.submit(p, max_new=sub.max_new, prefix=sub.prefix)
+            sub.reqs.append(r)
+            if r.done:          # result-cache hit: resolved instantly
+                self._record_done(sub)
+            else:
+                sub.inflight.add(r.rid)
+                self._owners[(id(sub.engine), r.rid)] = sub
+        sub.peak_inflight = max(sub.peak_inflight, len(sub.inflight))
+
+    def _record_done(self, sub: Submission) -> None:
+        self.stats.rows += 1
+        self.trace.append((self.stats.ticks, sub.tenant))
+        if sub.first_done_tick is None:
+            sub.first_done_tick = self.stats.ticks
+        sub.last_done_tick = self.stats.ticks
+
+    def _retire_done(self) -> None:
+        still = []
+        for sub in self.active:
+            if sub.done:
+                self.pool.unpin(sub.engine.version)
+                self.finished.append(sub)
+            else:
+                still.append(sub)
+        self.active[:] = still
+
+    def step(self) -> bool:
+        """One fair-share tick; returns True while work remains."""
+        self._activate()
+        self.stats.ticks += 1
+        n = len(self.active)
+        for i in range(n):          # rotating round-robin admission
+            self._top_up(self.active[(self._rr + i) % n])
+        if n:
+            self._rr = (self._rr + 1) % n
+        # one decode tick per distinct engine with work, in activation
+        # order (deterministic)
+        engines: "OrderedDict[int, Engine]" = OrderedDict()
+        for sub in self.active:
+            engines.setdefault(id(sub.engine), sub.engine)
+        for eid, eng in engines.items():
+            if not eng.has_work():
+                continue
+            for req in eng.step():
+                owner = self._owners.pop((eid, req.rid), None)
+                if owner is not None:
+                    owner.inflight.discard(req.rid)
+                    self._record_done(owner)
+        self._retire_done()
+        self._activate()            # released pins may admit waiters
+        return bool(self.active or self.pending)
+
+    def run(self) -> List[Submission]:
+        """Tick until every submission completes; returns them all."""
+        t0 = time.time()
+        while self.step():
+            pass
+        self.stats.wall_s += time.time() - t0
+        return self.finished
+
+    # -- whole-query concurrency ---------------------------------------
+    def run_queries(self, queries: Dict[str, Any]) -> Dict[str, Any]:
+        """Drive OLAP query *plans* concurrently: ``queries`` maps
+        tenant -> ``Query``; each plan's LLM operators run in order,
+        but operators of different tenants interleave tick-by-tick.
+        Returns tenant -> result Table."""
+        gens = {t: q._ops() for t, q in queries.items()}
+        optimize = {t: q.optimize for t, q in queries.items()}
+        results: Dict[str, Any] = {}
+        current: Dict[str, Submission] = {}
+
+        def advance(tenant: str, send_val) -> None:
+            try:
+                qsig, probe, spec = gens[tenant].send(send_val)
+            except StopIteration as stop:
+                results[tenant] = stop.value
+                return
+            current[tenant] = self.submit(
+                tenant, spec.prompts, qsig=qsig, probe=probe,
+                max_new=spec.max_new, prefix=spec.prefix,
+                optimize=optimize[tenant])
+
+        t0 = time.time()
+        for tenant in queries:
+            advance(tenant, None)
+        while current:
+            self.step()
+            for tenant in list(current):
+                sub = current[tenant]
+                if sub.done:
+                    del current[tenant]
+                    advance(tenant, sub.results())
+        self.stats.wall_s += time.time() - t0
+        return results

@@ -14,11 +14,22 @@ jax.config.update("jax_enable_x64", False)
 import pytest  # noqa: E402
 
 from repro.configs import registry  # noqa: E402
+from repro.configs.base import ModelConfig  # noqa: E402
 from repro.models import api  # noqa: E402
 
 
 FAST_ARCHS = ("mistral-nemo-12b", "gemma2-2b", "qwen2-moe-a2.7b",
               "rwkv6-3b", "zamba2-7b", "whisper-base")
+
+
+@pytest.fixture(scope="session")
+def tiny_dense():
+    """Shared 2-layer dense test model, built once for the whole run
+    (test_scheduler and test_iolm_session both optimize/serve it)."""
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=260,
+                      max_seq=256)
+    return cfg, api.init_params(jax.random.PRNGKey(0), cfg)
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,141 @@
+"""End-to-end coverage of the instance-optimization workflow:
+``IOLMSession._optimize`` recipe search, identity-model fallback, and
+the ``ModelCache`` hit/miss/eviction + data-signature paths."""
+import numpy as np
+import pytest
+
+from repro.core import policy as POL
+from repro.core.pipeline import Recipe
+from repro.models import api
+from repro.olap.query import IOLMSession, ModelCache, OptimizedModel
+
+
+W8 = Recipe(name="w8", wbits=8, quant_method="absmax")
+
+
+@pytest.fixture(scope="module")
+def tiny(tiny_dense):
+    return tiny_dense
+
+
+def make_session(tiny, **kw):
+    cfg, params = tiny
+    kw.setdefault("recipes", [W8])
+    kw.setdefault("calib_rows", 4)
+    kw.setdefault("eval_rows", 2)
+    kw.setdefault("engine_kw", dict(slots=2, max_len=64, buckets=(32,)))
+    return IOLMSession(params, cfg, **kw)
+
+
+PROMPTS = [f"fix: categ{i}" for i in range(8)]
+
+
+class TestOptimizeWorkflow:
+    def test_optimize_runs_search_and_versions_model(self, tiny):
+        sess = make_session(tiny)
+        m = sess._optimize("qsig1", PROMPTS)
+        assert isinstance(m, OptimizedModel)
+        # version ties the model to (query, DATA, recipe): compression
+        # is calibration-dependent, so the data signature is part of
+        # the identity
+        dsig = sess.model_cache.data_signature(PROMPTS)
+        assert m.version == f"qsig1:{dsig}:w8"
+        assert m.recipe.name == "w8"
+        assert m.report is not None and m.report.compression > 1.0
+        assert any("picked w8" in line for line in sess.log)
+        # the compressed params actually run
+        logits, _ = api.forward(m.params, m.cfg,
+                                {"tokens": np.ones((1, 8), np.int32)})
+        assert logits.shape[-1] == m.cfg.vocab_size
+
+    def test_model_cache_hit_skips_reoptimization(self, tiny):
+        sess = make_session(tiny)
+        m1 = sess._optimize("qsig1", PROMPTS)
+        n_log = len(sess.log)
+        m2 = sess._optimize("qsig1", PROMPTS)
+        assert m2 is m1                          # memoized, not re-searched
+        assert sess.model_cache.hits == 1
+        assert any("model cache hit" in line for line in sess.log[n_log:])
+
+    def test_distinct_data_resolves_to_distinct_models(self, tiny):
+        sess = make_session(tiny)
+        m1 = sess._optimize("qsig1", PROMPTS)
+        m2 = sess._optimize("qsig1", [p + "x" for p in PROMPTS])
+        assert sess.model_cache.hits == 0
+        assert len(sess.model_cache) == 2
+        # same query over different data must NOT share a model version:
+        # a pool keyed on version would otherwise serve tenant B through
+        # tenant A's data-calibrated params
+        assert m1.version != m2.version
+
+    def test_identity_fallback_when_no_recipe_survives(self, tiny,
+                                                       monkeypatch):
+        """Empty search outcome (every recipe inapplicable / below the
+        acc floor with no candidates at all) -> the session falls back
+        to the uncompressed identity model instead of failing."""
+        cfg, params = tiny
+        sess = make_session(tiny)
+
+        def empty_search(opt, eval_fn, recipes, *, acc_floor, keep_params):
+            base = eval_fn(opt.params, opt.cfg)
+            return POL.SearchOutcome(baseline=base, candidates=[],
+                                     perf=None, acc=None)
+
+        monkeypatch.setattr("repro.olap.query.POL.search", empty_search)
+        m = sess._optimize("qsig1", PROMPTS)
+        assert m.version == "base"
+        assert m.recipe.name == "identity"
+        assert m.params is params                # the base model, unchanged
+        # the fallback is cached like any other outcome
+        assert sess._optimize("qsig1", PROMPTS) is m
+
+    def test_acc_objective_picks_acc_variant(self, tiny):
+        sess = make_session(tiny, objective="acc",
+                            recipes=[W8, Recipe(name="w4", wbits=4,
+                                                group=32)])
+        m = sess._optimize("qsig1", PROMPTS)
+        assert m.version.startswith("qsig1:")
+        # acc objective maximizes agreement; w8 dominates w4 here
+        assert m.recipe.name == "w8"
+
+
+class TestModelCache:
+    def _m(self, tag):
+        return OptimizedModel(None, None, None, Recipe(name=tag), tag)
+
+    def test_signature_sees_past_first_64_values(self):
+        head = [f"v{i}" for i in range(64)]
+        a = head + ["tail-a"]
+        b = head + ["tail-b"]
+        assert ModelCache.data_signature(a) != ModelCache.data_signature(b)
+
+    def test_signature_sees_value_count(self):
+        vals = [f"v{i}" for i in range(70)]
+        assert (ModelCache.data_signature(vals)
+                != ModelCache.data_signature(vals + [vals[-1]]))
+
+    def test_signature_separates_long_values_with_common_prefix(self):
+        base = "x" * 300
+        assert (ModelCache.data_signature([base + "a"])
+                != ModelCache.data_signature([base + "ab"]))
+
+    def test_signature_deterministic(self):
+        vals = [f"row{i}" for i in range(100)]
+        assert (ModelCache.data_signature(vals)
+                == ModelCache.data_signature(list(vals)))
+
+    def test_capacity_cap_evicts_lru(self):
+        mc = ModelCache(capacity=2)
+        mc.put("q1", "d", self._m("m1"))
+        mc.put("q2", "d", self._m("m2"))
+        assert mc.get("q1", "d") is not None     # refresh q1
+        mc.put("q3", "d", self._m("m3"))         # evicts q2, not q1
+        assert len(mc) == 2 and mc.evictions == 1
+        assert mc.get("q2", "d") is None
+        assert mc.get("q1", "d") is not None
+
+    def test_unbounded_tenant_stream_stays_capped(self):
+        mc = ModelCache(capacity=8)
+        for i in range(100):
+            mc.put(f"q{i}", "d", self._m(f"m{i}"))
+        assert len(mc) == 8 and mc.evictions == 92

@@ -115,3 +115,127 @@ def test_sparsegpt_respects_target_sparsity(seed, sparsity):
     H = X.T @ X
     _, mask = S.sparsegpt_prune(w, H, sparsity=sparsity, blocksize=32)
     assert abs((~mask).mean() - sparsity) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant scheduler/pool invariants (serving/scheduler.py)
+# ---------------------------------------------------------------------------
+
+from repro.serving.scheduler import PoolBudgetError, Scheduler  # noqa: E402
+from test_scheduler import fake_pool  # noqa: E402
+
+
+@given(sizes=st.lists(st.integers(1, 50), min_size=1, max_size=8),
+       budget=st.integers(20, 120),
+       accesses=st.lists(st.integers(0, 7), min_size=1, max_size=30))
+@settings(**SETTINGS)
+def test_pool_budget_never_exceeded(sizes, budget, accesses):
+    """Residency is a hard invariant across any acquire sequence:
+    either the entry fits (post-eviction) or the pool refuses."""
+    table = {f"q{i}": sz for i, sz in enumerate(sizes)}
+    _, pool = fake_pool(table, budget=budget)
+    for a in accesses:
+        q = f"q{a % len(sizes)}"
+        try:
+            pool.engine_for(q)
+        except PoolBudgetError as e:
+            assert not e.retryable and table[q] > budget
+        assert pool.resident_bytes <= pool.byte_budget
+
+
+@given(sizes=st.lists(st.integers(1, 50), min_size=1, max_size=6),
+       budget=st.integers(50, 120),
+       accesses=st.lists(st.integers(0, 5), min_size=1, max_size=25))
+@settings(**SETTINGS)
+def test_pool_eviction_order_deterministic(sizes, budget, accesses):
+    """Replaying an identical acquire sequence yields an identical
+    eviction log (pure LRU, no hidden state)."""
+    table = {f"q{i}": sz for i, sz in enumerate(sizes)}
+    logs = []
+    for _ in range(2):
+        _, pool = fake_pool(table, budget=budget)
+        for a in accesses:
+            try:
+                pool.engine_for(f"q{a % len(sizes)}")
+            except PoolBudgetError:
+                pass
+        logs.append(list(pool.eviction_log))
+    assert logs[0] == logs[1]
+
+
+@given(n_tenants=st.integers(2, 4), rows=st.integers(2, 6),
+       share=st.integers(1, 3), seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_scheduler_no_tenant_starvation(n_tenants, rows, share, seed):
+    """Fair-share admission: every tenant gets its full ``share`` of
+    in-flight rows (never more), and with equal-cost rows no tenant's
+    first completion waits on another tenant finishing."""
+    rng = np.random.default_rng(seed)
+    per_tenant = {f"t{i}": [f"{'x' * 3}{j}" for j in range(rows)]
+                  for i in range(n_tenants)}       # equal-duration rows
+    sizes = {f"t{i}": 1 for i in range(n_tenants)}  # one model per tenant
+    _, pool = fake_pool(sizes, budget=10 * n_tenants, slots=4)
+    sched = Scheduler(pool, share=share)
+    subs = [sched.submit(t, prompts, qsig=t)
+            for t, prompts in per_tenant.items()]
+    # submission order shuffled independently of tenant ids
+    rng.shuffle(subs)
+    sched.run()
+    firsts = [s.first_done_tick for s in subs]
+    for s in subs:
+        assert s.done and len(s.results()) == rows
+        assert s.peak_inflight == min(share, rows)   # full share, no more
+    assert max(firsts) - min(firsts) <= 1            # simultaneous progress
+
+
+# --- interleaved decode == serial decode (real engine, persistent jit) ----
+
+_SERIAL = {}
+
+
+def _tiny_serving():
+    """Lazy module-level model + persistent engines so hypothesis
+    examples after the first pay no recompilation."""
+    if not _SERIAL:
+        import jax
+        from repro.configs.base import ModelConfig
+        from repro.models import api
+        from repro.serving.engine import Engine
+        cfg = ModelConfig(name="p", family="dense", n_layers=1, d_model=32,
+                          n_heads=2, n_kv_heads=1, d_ff=64, vocab_size=260,
+                          max_seq=128)
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        kw = dict(slots=2, max_len=48, buckets=(16,))
+        _SERIAL["shared"] = Engine(params, cfg, version="base", **kw)
+        _SERIAL["serial"] = Engine(params, cfg, version="base", **kw)
+    return _SERIAL
+
+
+@given(p1=st.lists(st.text(alphabet="ab ", max_size=6), min_size=1,
+                   max_size=4),
+       p2=st.lists(st.text(alphabet="ab ", max_size=6), min_size=1,
+                   max_size=4))
+@settings(max_examples=8, deadline=None)
+def test_scheduler_byte_identical_to_serial(p1, p2):
+    """Interleaving two tenants' greedy streams through one shared
+    engine produces exactly the tokens each would get decoding alone:
+    the schedule changes, the outputs must not."""
+    from test_scheduler import FakeSession
+    from repro.serving.scheduler import ModelPool, Scheduler
+    env = _tiny_serving()
+    pool = ModelPool(FakeSession({}), byte_budget=1,
+                     engine_factory=None, entry_bytes=lambda m: 1)
+    pool._entries.clear()
+    # park the persistent shared engine as the resident "base" entry
+    from repro.serving.scheduler import PoolEntry
+    pool._entries["base"] = PoolEntry(engine=env["shared"], nbytes=1)
+    sched = Scheduler(pool, share=2)
+    s1 = sched.submit("t1", list(p1), qsig="base", optimize=False,
+                      max_new=4)
+    s2 = sched.submit("t2", list(p2), qsig="base", optimize=False,
+                      max_new=4)
+    sched.run()
+    ref1 = env["serial"].generate(list(p1), max_new=4)
+    ref2 = env["serial"].generate(list(p2), max_new=4)
+    assert s1.results() == ref1
+    assert s2.results() == ref2

@@ -1,0 +1,345 @@
+"""serving/scheduler.py: ModelPool residency/eviction/pinning and the
+fair-share Scheduler, plus the cross-tenant PrefixCache regression."""
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core.pipeline import InstanceOptimizer, Recipe
+from repro.olap.query import IOLMSession, Query
+from repro.olap.table import Table
+from repro.serving.batcher import Request
+from repro.serving.cache import PrefixCache
+from repro.serving.engine import Engine
+from repro.serving.scheduler import (ModelPool, PoolBudgetError, Scheduler,
+                                     slot_state_bytes)
+
+W8 = Recipe(name="w8", wbits=8, quant_method="absmax")
+
+
+# ---------------------------------------------------------------------------
+# fakes: pool/scheduler mechanics without model compute
+# ---------------------------------------------------------------------------
+
+class FakeEngine:
+    """Deterministic async-engine stand-in: FIFO slots, each request
+    decodes for ``1 + len(text) % 3`` ticks, then finishes."""
+
+    def __init__(self, version, slots=2):
+        self.version = version
+        self.slots = slots
+        self.queue = []
+        self.active = {}
+        self._rid = 0
+
+    def submit(self, text, *, max_new=8, prefix=None):
+        r = Request(rid=self._rid, prompt_ids=[], max_new=max_new)
+        self._rid += 1
+        r.ticks_left = 1 + (len(text) % 3)
+        r.src = text
+        self.queue.append(r)
+        return r
+
+    def has_work(self):
+        return bool(self.queue or self.active)
+
+    def step(self):
+        while self.queue and len(self.active) < self.slots:
+            r = self.queue.pop(0)
+            self.active[r.rid] = r
+        finished = []
+        for rid in list(self.active):
+            r = self.active[rid]
+            r.ticks_left -= 1
+            if r.ticks_left <= 0:
+                r.done, r.text = True, f"out({r.src})"
+                del self.active[rid]
+                finished.append(r)
+        return finished
+
+
+class FakeSession:
+    """Duck-typed IOLMSession: versions == qsigs, sized per ``sizes``."""
+
+    params = cfg = tok = None
+
+    def __init__(self, sizes):
+        self.sizes = sizes
+        self.optimize_calls = []
+
+    def _optimize(self, qsig, probe):
+        self.optimize_calls.append(qsig)
+        return SimpleNamespace(params=None, cfg=None, version=qsig)
+
+
+def fake_pool(sizes, budget, slots=2):
+    sess = FakeSession(sizes)
+    pool = ModelPool(sess, budget,
+                     engine_factory=lambda m: FakeEngine(m.version,
+                                                         slots=slots),
+                     entry_bytes=lambda m: sizes[m.version])
+    return sess, pool
+
+
+class TestModelPool:
+    def test_lru_eviction_under_budget(self):
+        sess, pool = fake_pool({"a": 40, "b": 40, "c": 40}, budget=100)
+        ea = pool.engine_for("a")
+        pool.engine_for("b")
+        pool.engine_for("a")                     # refresh a
+        pool.engine_for("c")                     # evicts b (LRU), not a
+        assert pool.resident_versions == ["b", "a", "c"][1:]
+        assert pool.eviction_log == ["b"]
+        assert pool.resident_bytes == 80 <= pool.byte_budget
+        assert pool.engine_for("a") is ea        # a survived
+
+    def test_budget_is_hard_invariant(self):
+        sess, pool = fake_pool({f"m{i}": 30 for i in range(10)}, budget=100)
+        for i in range(10):
+            pool.engine_for(f"m{i}")
+            assert pool.resident_bytes <= pool.byte_budget
+        assert len(pool) == 3                    # 3 * 30 <= 100
+
+    def test_oversize_model_raises_unretryable(self):
+        sess, pool = fake_pool({"big": 200}, budget=100)
+        with pytest.raises(PoolBudgetError) as ei:
+            pool.engine_for("big")
+        assert not ei.value.retryable
+
+    def test_pinned_entries_never_evicted(self):
+        sess, pool = fake_pool({"a": 60, "b": 60}, budget=100)
+        pool.engine_for("a")
+        pool.pin("a")
+        with pytest.raises(PoolBudgetError) as ei:
+            pool.engine_for("b")                 # a pinned: cannot make room
+        assert ei.value.retryable
+        assert pool.resident_versions == ["a"]
+        pool.unpin("a")
+        pool.engine_for("b")                     # now a is evictable
+        assert pool.eviction_log == ["a"]
+
+    def test_retryable_refusal_evicts_nothing(self):
+        """An admission that cannot succeed (pinned residents block the
+        room) must not sacrifice warm unpinned engines on the way to
+        failing."""
+        sess, pool = fake_pool({"a": 60, "b": 30, "c": 50}, budget=100)
+        pool.engine_for("a")
+        pool.pin("a")
+        pool.engine_for("b")                 # resident but idle
+        with pytest.raises(PoolBudgetError) as ei:
+            pool.engine_for("c")             # 60 pinned + 50 > 100
+        assert ei.value.retryable
+        assert pool.resident_versions == ["a", "b"]
+        assert pool.eviction_log == []
+
+    def test_blocked_submission_optimizes_once(self):
+        """A budget-blocked pending submission resolves its model once
+        and re-admits the memoized result per retry — no per-tick
+        re-optimization, no phantom ModelCache hits."""
+        sess, pool = fake_pool({"a": 80, "b": 80}, budget=100)
+        sched = Scheduler(pool, share=2)
+        sched.submit("t1", ["xxxx", "yyyy"], qsig="a")
+        s2 = sched.submit("t2", ["zz"], qsig="b")
+        sched.run()
+        assert s2.done
+        assert sess.optimize_calls.count("b") == 1
+
+    def test_eviction_reoptimizes_on_readmit(self):
+        sess, pool = fake_pool({"a": 60, "b": 60}, budget=100)
+        pool.engine_for("a")
+        pool.engine_for("b")                     # evicts a
+        pool.engine_for("a")                     # miss: optimize again
+        assert sess.optimize_calls == ["a", "b", "a"]
+        assert pool.stats.misses == 3 and pool.stats.evictions == 2
+
+    def test_resident_hit_skips_rebuild(self):
+        sess, pool = fake_pool({"a": 10}, budget=100)
+        e1 = pool.engine_for("a")
+        e2 = pool.engine_for("a")
+        assert e1 is e2
+        assert pool.stats.hits == 1
+        # _optimize still consulted (the session's ModelCache memoizes
+        # the search itself); only the ENGINE build is skipped
+        assert sess.optimize_calls == ["a", "a"]
+
+
+class TestSchedulerFairness:
+    def test_tenants_interleave_not_serialize(self):
+        sizes = {"a": 10, "b": 10}
+        sess, pool = fake_pool(sizes, budget=100, slots=4)
+        sched = Scheduler(pool, share=2)
+        s1 = sched.submit("t1", [f"p{i}" for i in range(6)], qsig="a")
+        s2 = sched.submit("t2", [f"q{i}" for i in range(6)], qsig="b")
+        sched.run()
+        assert s1.done and s2.done
+        assert len(s1.results()) == 6 and len(s2.results()) == 6
+        # both tenants start finishing before either finishes everything
+        assert max(s1.first_done_tick, s2.first_done_tick) \
+            <= min(s1.last_done_tick, s2.last_done_tick)
+        # the share bound held throughout
+        assert s1.peak_inflight <= 2 and s2.peak_inflight <= 2
+
+    def test_share_bounds_admission_per_tenant(self):
+        sess, pool = fake_pool({"a": 10}, budget=100, slots=8)
+        sched = Scheduler(pool, share=3)
+        s = sched.submit("t", [f"p{i}" for i in range(10)], qsig="a")
+        sched.run()
+        assert s.peak_inflight <= 3
+
+    def test_budget_wait_head_of_line_activation(self):
+        """Budget fits one engine: tenant 2 waits pinned-out, then
+        activates the moment tenant 1's submission finishes."""
+        sess, pool = fake_pool({"a": 80, "b": 80}, budget=100)
+        sched = Scheduler(pool, share=2)
+        s1 = sched.submit("t1", ["x", "yy"], qsig="a")
+        s2 = sched.submit("t2", ["zzz"], qsig="b")
+        assert s1.active and not s2.active       # b blocked by pinned a
+        sched.run()
+        assert s1.done and s2.done
+        assert pool.eviction_log == ["a"]        # evicted once unpinned
+        assert len(s2.results()) == 1
+
+    def test_oversize_submission_fails_alone(self):
+        """A submission whose model can never fit the budget fails at
+        activation without aborting other tenants' runs; its error
+        surfaces from results(), not from step()/run()."""
+        sess, pool = fake_pool({"ok": 40, "big": 200}, budget=100)
+        sched = Scheduler(pool, share=2)
+        s1 = sched.submit("t1", ["xx", "yy"], qsig="ok")
+        s2 = sched.submit("t2", ["zz"], qsig="big")
+        sched.run()                              # must not raise
+        assert s1.done and len(s1.results()) == 2
+        assert s2.done and s2.error is not None
+        with pytest.raises(PoolBudgetError):
+            s2.results()
+
+    def test_zero_prompt_submission_completes(self):
+        sess, pool = fake_pool({"a": 10}, budget=100)
+        sched = Scheduler(pool, share=2)
+        s = sched.submit("t", [], qsig="a")
+        sched.run()
+        assert s.done and s.results() == []
+
+
+# ---------------------------------------------------------------------------
+# real-model integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny(tiny_dense):
+    return tiny_dense
+
+
+ENGINE_KW = dict(slots=2, max_len=64, buckets=(16, 48))
+
+
+def make_session(tiny, **kw):
+    cfg, params = tiny
+    kw.setdefault("recipes", [W8])
+    kw.setdefault("calib_rows", 4)
+    kw.setdefault("eval_rows", 2)
+    kw.setdefault("engine_kw", dict(ENGINE_KW))
+    return IOLMSession(params, cfg, **kw)
+
+
+class TestSchedulerIntegration:
+    def test_concurrent_queries_match_serial_execution(self, tiny):
+        langs = ["pyton", "javascrpt", "golang", "rst"]
+        reviews = ["good mouse here", "bad lamp sadly", "fine chair ok"]
+
+        def queries(sess):
+            q1 = Query(Table({"lang": list(langs)}), sess) \
+                .llm_correct("lang", max_new=6)
+            q2 = Query(Table({"review": list(reviews)}), sess) \
+                .llm_map("review", out_col="s", max_new=6)
+            return q1, q2
+
+        # concurrent: one pooled session, both plans interleaved
+        pooled = make_session(tiny, pool_budget=64 * 1024 * 1024)
+        q1, q2 = queries(pooled)
+        res = Scheduler(pooled.pool, share=2).run_queries({"a": q1, "b": q2})
+        # serial reference: fresh session, private engines, one at a time
+        serial = make_session(tiny)
+        r1, r2 = (q.run() for q in queries(serial))
+        assert res["a"]["lang_fixed"] == r1["lang_fixed"]
+        assert res["b"]["s"] == r2["s"]
+        # both optimized models were resident simultaneously
+        assert pooled.pool.stats.peak_resident_models >= 2
+
+    def test_cross_tenant_dedup_decodes_once(self, tiny):
+        sess = make_session(tiny, pool_budget=64 * 1024 * 1024)
+        sched = Scheduler(sess.pool, share=4)
+        prompts = [f"fix: val{i}" for i in range(4)]
+        s1 = sched.submit("t1", list(prompts), qsig="q", optimize=False,
+                          max_new=4)
+        s2 = sched.submit("t2", list(prompts), qsig="q", optimize=False,
+                          max_new=4)
+        sched.run()
+        assert s1.results() == s2.results()
+        eng = s1.engine
+        assert eng is s2.engine                  # same version -> same engine
+        # tenant 2's rows all rode the result cache / follower path
+        assert eng.stats.cache_hits >= len(prompts)
+        assert eng.stats.rows == 2 * len(prompts)
+
+    def test_serial_pooled_query_reuses_resident_engine(self, tiny):
+        sess = make_session(tiny, pool_budget=64 * 1024 * 1024)
+        t = Table({"lang": ["pyton", "javascrpt"]})
+        Query(t, sess).llm_correct("lang", max_new=4).run()
+        misses = sess.pool.stats.misses
+        Query(t, sess).llm_correct("lang", max_new=4).run()
+        assert sess.pool.stats.misses == misses      # engine stayed resident
+        assert sess.pool.stats.hits >= 1
+        assert sess.model_cache.hits >= 1
+
+    def test_slot_state_bytes_positive_and_scales(self, tiny):
+        cfg, _ = tiny
+        b64 = slot_state_bytes(cfg, 64)
+        b128 = slot_state_bytes(cfg, 128)
+        assert 0 < b64 < b128
+
+
+# ---------------------------------------------------------------------------
+# the cross-tenant PrefixCache regression (satellite)
+# ---------------------------------------------------------------------------
+
+TEMPLATE = "fix the category value please: "
+
+
+class TestSharedPrefixCacheIsolation:
+    def test_no_prefilled_state_leaks_across_model_versions(self, tiny):
+        """Two tenants share one PrefixCache (the pool arrangement) and
+        one rendered template, but run different compressed models: the
+        version component of the key must keep their prefilled states
+        apart — outputs must equal private-cache runs exactly."""
+        cfg, params = tiny
+        opt = InstanceOptimizer(params, cfg)
+        p8, c8, _ = opt.apply(W8)
+        kw = dict(slots=2, max_len=96, buckets=(16, 64))
+        prompts = [f"{TEMPLATE}val{i}" for i in range(5)]
+
+        shared = PrefixCache(capacity=8)
+        e_base = Engine(params, cfg, version="base", prefix_cache=shared,
+                        **kw)
+        e_int8 = Engine(p8, c8, version="q:w8", prefix_cache=shared, **kw)
+        out_base = e_base.generate_stream(iter(prompts), max_new=6,
+                                          prefix=TEMPLATE)
+        out_int8 = e_int8.generate_stream(iter(prompts), max_new=6,
+                                          prefix=TEMPLATE)
+        # both engines exercised the prefix path for real
+        assert e_base.stats.prefix_hits > 0
+        assert e_int8.stats.prefix_hits > 0
+        # one entry per model version, same token prefix
+        assert len(shared) == 2
+
+        # private-cache references: the ground truth each tenant would
+        # have produced with no sharing at all
+        r_base = Engine(params, cfg, version="base", **kw) \
+            .generate_stream(iter(prompts), max_new=6, prefix=TEMPLATE)
+        r_int8 = Engine(p8, c8, version="q:w8", **kw) \
+            .generate_stream(iter(prompts), max_new=6, prefix=TEMPLATE)
+        assert out_base == r_base
+        assert out_int8 == r_int8
+        # both entries live under the SAME token prefix, split by version
+        versions = sorted(v for _, v in shared._d)
+        assert versions == ["base", "q:w8"]
+        assert len({ids for ids, _ in shared._d}) == 1
