@@ -83,7 +83,7 @@ def budget_engine(params, cfg, tok, mem_budget: int, **kw) -> Engine:
 
 
 def v5e_decode_rows_per_s(params, cfg, slots: int, avg_new: int,
-                          *, max_len: int = 160) -> float:
+                          *, max_len: int = 160, ndev: int = 1) -> float:
     """Roofline-predicted serving throughput on the TPU v5e target.
 
     One decode step streams the (compressed) weights + every live slot's
@@ -92,14 +92,45 @@ def v5e_decode_rows_per_s(params, cfg, slots: int, avg_new: int,
     container cannot measure (serial core, no HBM) but the compiled
     artifact sizes determine: int8 weights halve the memory term, freed
     budget raises ``slots`` — the paper's two throughput mechanisms.
+
+    ``ndev > 1`` models a tensor-parallel engine: each device streams
+    and computes 1/ndev of the weights AND 1/ndev of the per-slot
+    cache (cache_shardings shards KV over the model axis) per step,
+    but the result is still ONE model's decode stream (the
+    device-parallel benchmark compares it against ndev independent
+    compressed replicas).
     """
     from repro.core.compressed import param_bytes
     from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS
-    wb = param_bytes(params)
-    kv = slot_bytes(cfg, max_len)
-    flops = 2.0 * cfg.active_param_count() * slots
+    n = max(ndev, 1)
+    wb = param_bytes(params) / n
+    kv = slot_bytes(cfg, max_len) / n
+    flops = 2.0 * cfg.active_param_count() * slots / n
     t_step = max((wb + slots * kv) / HBM_BW, flops / PEAK_FLOPS)
     return slots / (t_step * avg_new)
+
+
+def tenant_workload(i: int, n_rows: int, *, seed0: int = 100):
+    """Distinct prompt template per tenant -> distinct qsig -> distinct
+    compressed instance; unique row suffixes keep the result cache out
+    of fleet measurements.  Shared by the multi-tenant and
+    device-parallel benchmarks (different ``seed0`` per benchmark)."""
+    tmpl = (f"tenant-{i} data cleaning: reply with only the canonical "
+            f"category for value: ")
+    rows = D.workload_rows("correct", n_rows, seed=seed0 + i)
+    prompts = [f"{tmpl}{r.text}#{j}" for j, r in enumerate(rows)]
+    return tmpl, prompts
+
+
+def reset_pool_steady_state(pool) -> None:
+    """Clear per-engine result caches + stats after a fleet benchmark's
+    warmup pass, so the timed pass measures the warm pool (resident
+    engines, built jit executables) rather than compilation."""
+    from repro.serving.engine import EngineStats
+    for entry in pool._entries.values():
+        if entry.engine.result_cache is not None:
+            entry.engine.result_cache.clear()
+        entry.engine.stats = EngineStats()
 
 
 def task_accuracy(outs: List[str], rows) -> float:

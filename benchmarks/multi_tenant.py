@@ -47,12 +47,12 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.common import Csv, load_model, v5e_decode_rows_per_s
+from benchmarks.common import (Csv, load_model, reset_pool_steady_state,
+                               tenant_workload, v5e_decode_rows_per_s)
 from repro.core.pipeline import Recipe
 from repro.olap.query import IOLMSession
-from repro.serving.engine import Engine, EngineStats
+from repro.serving.engine import Engine
 from repro.serving.scheduler import Scheduler, slot_state_bytes
-from repro.training import data as D
 
 MAX_NEW = 8
 ENGINE_KW = dict(slots=4, max_len=128, buckets=(24, 96))
@@ -65,16 +65,6 @@ FLEETS = {
     "base": [Recipe(name="identity")],
     "iolm": [Recipe(name="w8", wbits=8, quant_method="absmax")],
 }
-
-
-def tenant_workload(i: int, n_rows: int):
-    """Distinct template per tenant -> distinct qsig -> distinct model;
-    unique row suffixes keep the result cache out of this story."""
-    tmpl = (f"tenant-{i} data cleaning: reply with only the canonical "
-            f"category for value: ")
-    rows = D.workload_rows("correct", n_rows, seed=100 + i)
-    prompts = [f"{tmpl}{r.text}#{j}" for j, r in enumerate(rows)]
-    return tmpl, prompts
 
 
 def make_session(params, cfg, tok, recipes, budget) -> IOLMSession:
@@ -100,10 +90,7 @@ def run_cell(params, cfg, tok, recipes, budget, n_tenants, n_rows):
     sess = make_session(params, cfg, tok, recipes, budget)
     sched, _ = submit_all(sess, n_tenants, n_rows)
     sched.run()
-    for entry in sess.pool._entries.values():          # steady state
-        if entry.engine.result_cache is not None:
-            entry.engine.result_cache.clear()
-        entry.engine.stats = EngineStats()
+    reset_pool_steady_state(sess.pool)
     ev0 = sess.pool.stats.evictions        # report the timed pass only
     t0 = time.time()
     sched, subs = submit_all(sess, n_tenants, n_rows)

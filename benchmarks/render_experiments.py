@@ -1,6 +1,19 @@
-"""Render results/dryrun.json into EXPERIMENTS.md §Dry-run + §Roofline."""
+"""Render benchmark artifacts into the committed docs.
+
+Two targets:
+
+  --readme   regenerate the README.md §Results table from the
+             ``results/BENCH_*.json`` artifacts written by
+             ``benchmarks/{serving,multi_tenant,device_parallel}.py
+             --json`` (each spliced between RESULTS_BEGIN/END markers)
+  (default)  render results/dryrun.json into EXPERIMENTS.md §Dry-run +
+             §Roofline — skipped with a message when either file is
+             absent (the dry-run artifact is not part of the tree)
+"""
 from __future__ import annotations
 
+import argparse
+import glob
 import json
 import os
 import sys
@@ -11,6 +24,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 RESULTS = os.path.join(ROOT, "results", "dryrun.json")
 EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+README = os.path.join(ROOT, "README.md")
 HBM = 16e9
 
 # rwkv/zamba inner sequence recurrences stay as rolled scans even in the
@@ -109,7 +123,87 @@ def _splice(text, begin, end, body):
     return text[:i] + "\n" + body + "\n" + text[j:]
 
 
-def main():
+# ---------------------------------------------------------------------------
+# README §Results from results/BENCH_*.json
+# ---------------------------------------------------------------------------
+
+def _latest(pattern):
+    """Newest artifact matching results/BENCH_<pattern>*.json, parsed."""
+    hits = sorted(glob.glob(os.path.join(ROOT, "results",
+                                         f"BENCH_{pattern}*.json")),
+                  key=os.path.getmtime)
+    if not hits:
+        return None
+    with open(hits[-1]) as f:
+        return json.load(f)
+
+
+def readme_results_table() -> str:
+    lines = ["| benchmark | cell | rows/s | v5e rows/s | notes |",
+             "|---|---|---|---|---|"]
+    n = 0
+    serving = _latest("serving")
+    if serving:
+        for mname, p in serving.get("prefix", {}).items():
+            lines.append(
+                f"| serving (prefix cache) | {mname} off→on | "
+                f"{p['rows_per_s_off']:.1f} → {p['rows_per_s_on']:.1f} | "
+                f"— | {p['prefill_token_reduction'] * 100:.0f}% prefill "
+                f"tokens saved, outputs identical="
+                f"{p['outputs_identical']} |")
+            n += 1
+    mt = _latest("multitenant")
+    mt_cells = (mt or {}).get("cells") or []
+    if mt_cells:
+        nmax = max(c["tenants"] for c in mt_cells)
+        for c in mt_cells:
+            if c["tenants"] != nmax:
+                continue
+            lines.append(
+                f"| multi-tenant | {c['fleet']} x{c['tenants']} tenants | "
+                f"{c['rows_per_s']:.1f} | {c['v5e_rows_per_s']:.0f} | "
+                f"{c['resident']} resident models |")
+            n += 1
+    dp = _latest("device_parallel")
+    for c in (dp or {}).get("cells") or []:
+        lines.append(
+            f"| device-parallel | {c['cell']} | "
+            f"{c['rows_per_s']:.1f} | {c['v5e_rows_per_s']:.0f} | "
+            f"{c['resident']} resident, "
+            f"{c['concurrent_devices']} devices in flight |")
+        n += 1
+    if n == 0:
+        return ("_No `results/BENCH_*.json` artifacts found — run the "
+                "benchmarks with `--json` first (see below)._")
+    lines.append("")
+    lines.append("_CPU `--smoke` numbers from this container; `v5e` is "
+                 "the roofline projection on the TPU target (aggregate "
+                 "over resident engines).  Regenerate: run the three "
+                 "benchmarks with `--json results/BENCH_<name>.json`, "
+                 "then `python benchmarks/render_experiments.py "
+                 "--readme`._")
+    return "\n".join(lines)
+
+
+def render_readme() -> None:
+    with open(README) as f:
+        text = f.read()
+    text = _splice(text, "<!-- RESULTS_BEGIN -->", "<!-- RESULTS_END -->",
+                   readme_results_table())
+    with open(README, "w") as f:
+        f.write(text)
+    print(f"rendered results/BENCH_*.json into {README}")
+
+
+def main(readme: bool = False):
+    if readme:
+        render_readme()
+        return
+    if not (os.path.exists(RESULTS) and os.path.exists(EXP)):
+        print(f"skipping EXPERIMENTS render: needs {RESULTS} and {EXP} "
+              "(run the dry-run first); use --readme for the README "
+              "results table")
+        return
     with open(RESULTS) as f:
         data = json.load(f)
     with open(EXP) as f:
@@ -124,4 +218,9 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--readme", action="store_true",
+                    help="regenerate README.md §Results from "
+                         "results/BENCH_*.json")
+    args = ap.parse_args()
+    main(readme=args.readme)

@@ -7,6 +7,9 @@
                buckets x sampler, base vs int8
   multi_tenant aggregate rows/s vs tenant count under a fixed pool byte
                budget, per-tenant base vs instance-optimized fleets
+  device_parallel
+               the fleet across a (forced) 4-device mesh: 1 vs 4
+               devices, TP base vs compressed replicas
   roofline     dry-run roofline table (§Roofline; needs results/dryrun.json)
 
 Prints ``name,us_per_call,derived`` CSV lines throughout.
@@ -19,8 +22,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def main() -> None:
-    from benchmarks import (ablation, multi_tenant, roofline, runtime_opts,
-                            serving, table1)
+    from benchmarks import (ablation, device_parallel, multi_tenant,
+                            roofline, runtime_opts, serving, table1)
     from benchmarks.common import Csv
     csv = Csv()
     print("== IOLM-DB benchmark suite ==")
@@ -29,6 +32,7 @@ def main() -> None:
     runtime_opts.main(csv)
     serving.main(csv)
     multi_tenant.main(csv)
+    device_parallel.main(csv)
     roofline.main(csv)
     print("\n== CSV summary ==")
     for line in csv.lines:

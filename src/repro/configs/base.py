@@ -175,7 +175,7 @@ SHAPES = {
 def shape_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
     """Whether (arch, shape) is a runnable cell; reason if skipped."""
     if shape == "long_500k" and not cfg.supports_long_context:
-        return False, "full-attention arch: 500k decode KV unjustifiable (see DESIGN.md §5)"
+        return False, "full-attention arch: 500k decode KV unjustifiable"
     return True, ""
 
 

@@ -3,7 +3,7 @@
 The IOLM-DB pipeline rewrites selected weight matrices of a model's param
 pytree into ``QTensor`` (quantized, optionally group-wise, optionally with
 SmoothQuant input scales) or ``BlockSparseTensor`` (TPU block-sparse, the
-hardware adaptation of the paper's 2:4 sparsity — see DESIGN.md §3).
+hardware adaptation of the paper's 2:4 sparsity).
 Every linear layer in ``repro.models`` calls :func:`matmul`, which
 dispatches on the container type, so compression is transparent to all
 architecture families.

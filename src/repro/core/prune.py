@@ -4,7 +4,7 @@ LLM-Pruner-style [20] removal of entire components, driven by the
 calibration statistics (so the *same data sample* that tunes quantization
 also decides what structure this query does not need).
 
-TPU-native design decision (DESIGN.md §3): pruned counts are **uniform
+TPU-native design decision: pruned counts are **uniform
 across layers** (every layer keeps the same number of KV groups / FFN
 channels / experts, each layer choosing its own least-important members).
 XLA requires static uniform shapes inside ``lax.scan`` stacks, and
@@ -72,8 +72,7 @@ def _np(x) -> np.ndarray:
 def prune_kv_groups(params, cfg, stats: CalibStats, keep: int):
     """Keep the ``keep`` most important KV groups in every attention block.
 
-    Inapplicable families (rwkv) are returned unchanged — recorded in
-    DESIGN.md §Arch-applicability.
+    Inapplicable families (rwkv) are returned unchanged.
     """
     if cfg.family == "rwkv":
         return params, cfg, stats
@@ -166,8 +165,7 @@ def prune_ffn(params, cfg, stats: CalibStats, keep_frac: float):
     Covers dense MLPs (wi/wg/wo), MoE expert FFNs (per-expert channels),
     qwen's shared MLP, arctic's dense-residual MLP, rwkv channel-mix, and
     whisper GELU MLPs.  Mamba inner channels are left alone (the SSD
-    state/headdim coupling makes channel removal a different operation —
-    see DESIGN.md §Arch-applicability).
+    state/headdim coupling makes channel removal a different operation).
     """
     if keep_frac >= 1.0:
         return params, cfg, stats

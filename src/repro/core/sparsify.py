@@ -4,7 +4,7 @@ Layout convention: weights are ``[d_in, d_out]`` — the reduction
 (input) dimension is axis 0, so N:M patterns group along axis 0 and
 comparison groups for per-output pruning run down columns.
 
-TPU adaptation (DESIGN.md §3): fine-grained 2:4 sparsity has no MXU
+TPU adaptation: fine-grained 2:4 sparsity has no MXU
 support, so N:M/unstructured masks buy *model-size* reduction (they
 compose with int8/int4 storage), while ``block_sparse_mask`` prunes whole
 128-aligned blocks that the Pallas ``block_sparse_matmul`` kernel

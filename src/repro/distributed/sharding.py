@@ -277,7 +277,8 @@ def replicated(mesh: Mesh):
 _ACT_SHARDING = None
 
 # ---------------------------------------------------------------------------
-# §Perf opt-in switches (EXPERIMENTS.md §Perf): the hillclimb iterations.
+# §Perf opt-in switches (see distributed/README.md): the hillclimb
+# iterations.
 # Baselines lower with everything False; `set_opt(...)`/env DRYRUN_OPT
 # flips individual optimizations for the before/after measurements.
 # ---------------------------------------------------------------------------

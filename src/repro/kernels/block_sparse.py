@@ -1,7 +1,7 @@
 """Pallas TPU kernel: block-sparse matmul that skips pruned MXU tiles.
 
 The paper uses 2:4 fine-grained sparsity on Ampere sparse tensor cores;
-TPUs have no sparse MXU, so the hardware adaptation (DESIGN.md §3) prunes
+TPUs have no sparse MXU, so the hardware adaptation prunes
 whole ``bs x bs`` blocks (bs = 128, the MXU tile) and *skips them
 entirely*: the grid's K dimension runs over only the ``keep`` surviving
 input blocks of each output block column, gathered through a scalar-

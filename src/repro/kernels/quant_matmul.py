@@ -1,6 +1,6 @@
 """Pallas TPU kernel: int8 group-quantized matmul with dequant-in-VMEM.
 
-Hardware adaptation of the paper's INT8 CUDA GEMM (DESIGN.md §3): the
+Hardware adaptation of the paper's INT8 CUDA GEMM: the
 weight lives in HBM as int8 (+ f32 group scales), halving the memory
 roofline term that dominates decode; each grid step copies one
 ``[bk, bn]`` int8 tile into VMEM, dequantizes it to bf16 *in VMEM*, and

@@ -380,7 +380,7 @@ def moe_capacity(n_tokens: int, cfg, train: bool) -> int:
 
 
 def moe_block(p, x, cfg, *, train: bool) -> Tuple[jax.Array, jax.Array]:
-    """Scatter/gather top-k MoE (EP-shardable; see DESIGN.md §6).
+    """Scatter/gather top-k MoE (EP-shardable; see distributed/README.md).
 
     x: [B, S, d] -> (out [B, S, d], aux load-balance loss scalar).
     """

@@ -107,6 +107,12 @@ class IOLMSession:
     models co-reside under one budget, and identical (model-version,
     prompt) work dedups across tenants through each pooled engine's
     result cache.
+
+    ``devices=``/``mesh=`` make that pool device-aware (the budget
+    turns per-device, engines are placed across the fleet, and with a
+    mesh an oversize model admits tensor-parallel); both default to
+    ``None`` ≡ the single-device behavior, with no API change for
+    existing callers.
     """
 
     def __init__(self, params, cfg, *, tokenizer: Optional[ByteTokenizer] = None,
@@ -115,7 +121,10 @@ class IOLMSession:
                  calib_rows: int = 16, eval_rows: int = 8,
                  engine_kw: Optional[Dict] = None,
                  pool_budget: Optional[int] = None,
-                 pool: Optional[ModelPool] = None):
+                 pool: Optional[ModelPool] = None,
+                 devices: Optional[List] = None,
+                 mesh=None,
+                 placement: str = "least_loaded"):
         self.params = params
         self.cfg = cfg
         self.tok = tokenizer or ByteTokenizer(max(cfg.vocab_size, 260))
@@ -128,9 +137,18 @@ class IOLMSession:
         self.engine_kw = engine_kw or {}
         self.log: List[str] = []
         self.pool = pool
+        if pool is not None and (devices is not None or mesh is not None):
+            raise ValueError("devices=/mesh= configure a NEW ModelPool and "
+                             "are ignored with an explicit pool= — "
+                             "construct the pool with them instead")
         if self.pool is None and pool_budget is not None:
             self.pool = ModelPool(self, pool_budget,
-                                  engine_kw=self.engine_kw)
+                                  engine_kw=self.engine_kw,
+                                  devices=devices, mesh=mesh,
+                                  placement=placement)
+        elif pool is None and (devices is not None or mesh is not None):
+            raise ValueError("devices=/mesh= require pool_budget= "
+                             "(they configure the shared ModelPool)")
 
     # -- engines --------------------------------------------------------
     def base_engine(self) -> Engine:

@@ -1,14 +1,15 @@
 """Serving engine: asynchronous continuous batching over fixed decode slots.
 
-TPU-adapted vLLM-style serving (DESIGN.md §3): XLA wants static shapes,
-so instead of paged KV blocks the engine keeps a **fixed pool of decode
-slots** — the KV cache is stacked per-row state with a leading slot
-axis, and the decode step is ``vmap`` of the model's single-row decode
-over that axis.  Slot admission is one jitted batched scatter
-``leaf.at[slot_idxs].set(row_states)`` for the WHOLE admission batch,
-uniform across every architecture family (attention KV, rwkv state,
-mamba state, whisper cross-KV ... all have a leading slot axis by
-construction), compiled once per admission width.
+TPU-adapted vLLM-style serving (see README.md in this package): XLA
+wants static shapes, so instead of paged KV blocks the engine keeps a
+**fixed pool of decode slots** — the KV cache is stacked per-row state
+with a leading slot axis, and the decode step is ``vmap`` of the
+model's single-row decode over that axis.  Slot admission is one
+jitted batched scatter ``leaf.at[slot_idxs].set(row_states)`` for the
+WHOLE admission batch, uniform across every architecture family
+(attention KV, rwkv state, mamba state, whisper cross-KV ... all have
+a leading slot axis by construction), compiled once per admission
+width.
 
 The engine is an async core with three entry points:
 
@@ -23,6 +24,23 @@ The engine is an async core with three entry points:
                     tick — callers may keep ``submit()``-ing between
                     ticks while decode is in flight.
   ``drain()``       tick until queue and slots are empty.
+
+``step()`` is internally split into ``step_begin()`` (admit + launch
+the tick's decode, without blocking on its result) and
+``step_finish()`` (block, retire).  A multi-device scheduler uses the
+split directly: it calls ``step_begin()`` on every engine first —
+XLA dispatch is asynchronous, so decode steps of engines **placed on
+distinct devices** execute concurrently — and only then collects with
+``step_finish()``.  ``step() == step_finish(step_begin())``, so the
+serial path is unchanged.
+
+Placement: ``Engine(..., device=d)`` commits the params (and all slot
+state) to one jax device, so a ``ModelPool`` can spread its resident
+fleet over ``jax.devices()``.  ``Engine(..., mesh=m)`` instead shards
+the params with the DP/TP rules of ``distributed/sharding.py``
+(``param_shardings=``/``cache_shardings=`` override them) — the
+tensor-parallel path for a model too big for one device.  Both default
+to ``None`` ≡ the historical single-implicit-device behavior.
 
 ``generate(texts)`` is the synchronous convenience wrapper
 (submit-all + drain) used by the benchmarks.
@@ -48,7 +66,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -92,6 +110,15 @@ class EngineStats:
                 if self.total_slot_steps else 0.0)
 
 
+class StepPending(NamedTuple):
+    """Handle between ``step_begin`` and ``step_finish``: the requests
+    already finished at admission, plus the launched decode's output
+    arrays — ``None`` when this tick dispatched no decode (empty
+    slots), so schedulers can tell real in-flight work from a no-op."""
+    finished: List["Request"]
+    nxt: Any
+
+
 class Engine:
     def __init__(self, params, cfg, *, tokenizer: Optional[ByteTokenizer] = None,
                  slots: int = 8, max_len: int = 256,
@@ -100,7 +127,33 @@ class Engine:
                  use_prefix_cache: bool = True,
                  prefix_cache: Optional[PrefixCache] = None,
                  extra_inputs: Optional[Dict] = None,
-                 sampling: Optional[SamplingConfig] = None):
+                 sampling: Optional[SamplingConfig] = None,
+                 device=None, mesh=None,
+                 param_shardings=None, cache_shardings=None):
+        if device is not None and mesh is not None:
+            raise ValueError("pass device= (single-device placement) OR "
+                             "mesh= (sharded), not both")
+        self.device = device
+        self.mesh = mesh
+        self._cache_shardings = cache_shardings
+        if mesh is not None:
+            from repro.distributed import sharding as SH
+            if param_shardings is None:
+                param_shardings = SH.param_shardings(cfg, params, mesh)
+            params = jax.device_put(params, param_shardings)
+            # distinct placements must never share prefilled state: a
+            # re-admitted model on a different device would hand jit
+            # operands committed to two devices.  The tag keys the
+            # prefix cache per placement (same-placement re-admission
+            # still reuses entries).
+            self._placement_tag = ("@mesh" + "x".join(
+                str(s) for s in mesh.devices.shape) + ":" + ",".join(
+                str(d.id) for d in mesh.devices.flat))
+        elif device is not None:
+            params = jax.device_put(params, device)
+            self._placement_tag = f"@{device.platform}:{device.id}"
+        else:
+            self._placement_tag = ""
         self.params = params
         self.cfg = cfg
         self.tok = tokenizer or ByteTokenizer(max(cfg.vocab_size, 260))
@@ -212,9 +265,19 @@ class Engine:
     # ------------------------------------------------------------------
     def _init_slots(self):
         one = api.init_cache(self.cfg, 1, self.max_len, compact_local=False)
-        self._slot_state = jax.tree.map(
+        state = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (self.slots,) + a.shape).copy(),
             one)
+        if self.mesh is not None:
+            if self._cache_shardings is None:
+                from repro.distributed import sharding as SH
+                shapes = jax.eval_shape(lambda: state)
+                self._cache_shardings = SH.cache_shardings(
+                    self.cfg, shapes, self.mesh)
+            state = jax.device_put(state, self._cache_shardings)
+        elif self.device is not None:
+            state = jax.device_put(state, self.device)
+        self._slot_state = state
 
     # -- async API ------------------------------------------------------
     def _encode_prefix(self, prefix: str):
@@ -224,7 +287,8 @@ class Engine:
         hit = self._prefix_ids_memo.get(prefix)
         if hit is None:
             p_ids = self.tok.encode(prefix, bos=True)
-            hit = (p_ids, self.prefix_cache.key(p_ids, self.version))
+            hit = (p_ids, self.prefix_cache.key(
+                p_ids, self.version + self._placement_tag))
             self._prefix_ids_memo[prefix] = hit
         return hit
 
@@ -292,6 +356,16 @@ class Engine:
     def step(self) -> List[Request]:
         """One engine tick (admit -> decode -> retire); returns the
         requests that finished during this tick."""
+        return self.step_finish(self.step_begin())
+
+    def step_begin(self):
+        """First half of a tick: admit a batch and LAUNCH the decode
+        step, without blocking on its result (XLA dispatch is async —
+        the returned handle's arrays are still being computed).  Pair
+        each call with exactly one ``step_finish(handle)`` before the
+        next ``step_begin``; the multi-device scheduler dispatches
+        ``step_begin`` on every engine (distinct devices then compute
+        concurrently) before collecting any of them."""
         if self._slot_state is None:
             self._init_slots()
         finished: List[Request] = []
@@ -371,8 +445,8 @@ class Engine:
                     self._cur_tok[s] = t0
                     self._cur_pos[s] = plen + int(lens[i])
         if not self._active:
-            return finished
-        # --- decode one token for every active slot ---
+            return StepPending(finished, None)
+        # --- decode one token for every active slot (launch only) ---
         nxt, self._slot_state = self._decode(
             self.params, self._slot_state, jnp.asarray(self._cur_tok),
             jnp.asarray(self._cur_pos), jnp.int32(self._decode_ctr))
@@ -380,6 +454,15 @@ class Engine:
         self.stats.decode_steps += 1
         self.stats.busy_slot_steps += len(self._active)
         self.stats.total_slot_steps += self.slots
+        return StepPending(finished, nxt)
+
+    def step_finish(self, pending: StepPending) -> List[Request]:
+        """Second half of a tick: block on the launched decode, then
+        retire/advance every active slot.  Returns all requests that
+        finished during the whole tick (admission-retired + decoded)."""
+        finished, nxt = pending
+        if nxt is None:
+            return finished
         nxt = np.asarray(nxt)
         # --- retire / advance ---
         for s in list(self._active):

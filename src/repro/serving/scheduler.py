@@ -44,6 +44,22 @@ prompt streams) concurrently: each ``Query`` exposes its plan as a
 coroutine of operator submissions, and the scheduler interleaves the
 operators of all tenants' queries while respecting each plan's own
 sequential dependencies.
+
+Device-parallel serving (the paper's "higher parallelism on existing
+hardware" read literally): constructed with ``devices=`` (a list of
+jax devices) or ``mesh=`` (a ``jax.sharding.Mesh``), the pool tracks a
+**per-device** byte budget, places each admitted engine's params on
+one device (``jax.device_put`` inside ``Engine``) under a least-loaded
+or affinity placement policy, and — with a mesh — admits a model too
+big for any single device as ONE tensor-parallel engine sharded by
+``distributed/sharding.py``'s rules, coexisting with the single-device
+replicas.  The scheduler's tick then *fans out*: it dispatches
+``Engine.step_begin()`` on every engine with work before collecting
+any ``step_finish()``, so engines pinned to distinct devices run their
+decode steps concurrently while outputs stay byte-identical to the
+serial executor (dispatch order is deterministic and per-engine
+sequencing is unchanged).  ``devices=None, mesh=None`` is exactly the
+historical single-device pool.
 """
 from __future__ import annotations
 
@@ -98,6 +114,15 @@ class PoolEntry:
     engine: Engine
     nbytes: int
     hits: int = 0
+    # device-aware pools: indices into pool.devices this entry occupies
+    # (one for a placed replica, all of them for a sharded TP entry) and
+    # the bytes charged against EACH of those devices' budgets.
+    devices: Tuple[int, ...] = ()
+    dev_bytes: int = 0
+
+    @property
+    def sharded(self) -> bool:
+        return len(self.devices) > 1
 
 
 @dataclass
@@ -107,6 +132,7 @@ class PoolStats:
     evictions: int = 0
     peak_resident_models: int = 0
     peak_resident_bytes: int = 0
+    sharded_admissions: int = 0   # models admitted tensor-parallel
 
 
 class ModelPool:
@@ -118,13 +144,41 @@ class ModelPool:
     ``engine_factory`` / ``entry_bytes`` are injection points for tests
     and alternate backends; the defaults build a real ``Engine`` and
     charge it ``param_bytes(model) + slots * slot_state_bytes(cfg)``.
+
+    Device-aware mode — pass ``devices=`` (list of jax devices) or
+    ``mesh=`` (its devices, plus a tensor-parallel admission path for
+    models too big for one device):
+
+    * ``byte_budget`` becomes **per-device**; total fleet capacity is
+      ``byte_budget * len(devices)``.
+    * Each admitted engine is pinned to one device (its params are
+      ``jax.device_put`` there by ``Engine``); ``placement`` picks it:
+      ``"least_loaded"`` (fewest resident bytes, lowest index on ties —
+      deterministic) or ``"affinity"`` (re-admit an evicted version to
+      its previous home while it fits, so same-placement prefix-cache
+      entries and warm state stay reusable; falls back to
+      least-loaded).
+    * A model with ``entry_bytes > byte_budget`` is admitted as ONE
+      sharded engine over ``mesh`` (when given), charging
+      ``ceil(bytes/n_devices)`` to every device — the tensor-parallel
+      base model coexisting with single-device compressed replicas.
+    * The budget stays a hard per-device invariant: admission evicts
+      LRU unpinned entries *on the chosen device(s)* and refuses
+      rather than overshoot.
+
+    ``devices=None, mesh=None`` (the default) is the historical
+    single-implicit-device pool: ``byte_budget`` is the total budget
+    and engines are built without placement.
     """
 
     def __init__(self, session, byte_budget: int, *,
                  engine_kw: Optional[Dict] = None,
                  prefix_capacity: int = 32,
                  engine_factory: Optional[Callable] = None,
-                 entry_bytes: Optional[Callable] = None):
+                 entry_bytes: Optional[Callable] = None,
+                 devices: Optional[List] = None,
+                 mesh=None,
+                 placement: str = "least_loaded"):
         self.session = session
         self.byte_budget = int(byte_budget)
         self.engine_kw = dict(engine_kw or {})
@@ -135,12 +189,27 @@ class ModelPool:
         self._pins: Dict[str, int] = {}
         self.stats = PoolStats()
         self.eviction_log: List[str] = []
+        if placement not in ("least_loaded", "affinity"):
+            raise ValueError(f"unknown placement policy {placement!r}")
+        self.placement = placement
+        self.mesh = mesh
+        if mesh is not None:
+            if devices is not None:
+                raise ValueError("pass devices= or mesh=, not both")
+            self.devices = list(mesh.devices.flat)
+        else:
+            self.devices = list(devices) if devices is not None else None
+        self._homes: Dict[str, int] = {}   # version -> last device index
+
+    @property
+    def device_aware(self) -> bool:
+        return self.devices is not None
 
     # -- defaults -------------------------------------------------------
-    def _default_factory(self, model) -> Engine:
+    def _default_factory(self, model, *, device=None, mesh=None) -> Engine:
         return Engine(model.params, model.cfg, tokenizer=self.session.tok,
                       version=model.version, prefix_cache=self.prefix_cache,
-                      **self.engine_kw)
+                      device=device, mesh=mesh, **self.engine_kw)
 
     def _default_bytes(self, model) -> int:
         slots = self.engine_kw.get("slots", 8)
@@ -156,6 +225,21 @@ class ModelPool:
     @property
     def resident_versions(self) -> List[str]:
         return list(self._entries)
+
+    def device_bytes(self, i: int) -> int:
+        """Bytes charged against device ``i``'s budget (device-aware)."""
+        return sum(e.dev_bytes for e in self._entries.values()
+                   if i in e.devices)
+
+    def _pinned_device_bytes(self, i: int) -> int:
+        return sum(e.dev_bytes for v, e in self._entries.items()
+                   if i in e.devices and self.pinned(v))
+
+    def placement_of(self, version: str) -> Tuple[int, ...]:
+        """Device indices a resident version occupies (``()`` when not
+        resident or the pool is not device-aware)."""
+        e = self._entries.get(version)
+        return e.devices if e is not None else ()
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -194,6 +278,20 @@ class ModelPool:
             self.stats.hits += 1
             return entry.engine
         need = int(self._entry_bytes(model))
+        if self.device_aware:
+            entry = self._admit_placed(model, need)
+        else:
+            entry = self._admit_legacy(model, need)
+        self._entries[model.version] = entry
+        self.stats.misses += 1
+        self.stats.peak_resident_models = max(self.stats.peak_resident_models,
+                                              len(self._entries))
+        self.stats.peak_resident_bytes = max(self.stats.peak_resident_bytes,
+                                             self.resident_bytes)
+        return entry.engine
+
+    def _admit_legacy(self, model, need: int) -> PoolEntry:
+        """Single-implicit-device admission (the historical behavior)."""
         if need > self.byte_budget:
             raise PoolBudgetError(
                 f"model {model.version!r} needs {need} bytes but the pool "
@@ -206,31 +304,93 @@ class ModelPool:
                 f"{pinned_bytes} bytes pinned by live submissions",
                 retryable=True)
         self._evict_until(self.byte_budget - need)
-        engine = self._engine_factory(model)
-        self._entries[model.version] = PoolEntry(engine=engine, nbytes=need)
-        self.stats.misses += 1
-        self.stats.peak_resident_models = max(self.stats.peak_resident_models,
-                                              len(self._entries))
-        self.stats.peak_resident_bytes = max(self.stats.peak_resident_bytes,
-                                             self.resident_bytes)
-        return engine
+        return PoolEntry(engine=self._engine_factory(model), nbytes=need)
+
+    # -- device-aware admission ----------------------------------------
+    def _pick_device(self, version: str, need: int) -> Optional[int]:
+        """Placement policy: the device this admission should land on,
+        or None when every device is blocked by pins (retryable).
+        Deterministic: least-loaded by resident bytes with lowest index
+        winning ties; ``affinity`` first tries the version's previous
+        home so re-admissions reuse same-placement state."""
+        cand = [i for i in range(len(self.devices))
+                if self._pinned_device_bytes(i) + need <= self.byte_budget]
+        if not cand:
+            return None
+        if self.placement == "affinity":
+            home = self._homes.get(version)
+            if home in cand:
+                return home
+        return min(cand, key=lambda i: (self.device_bytes(i), i))
+
+    def _admit_placed(self, model, need: int) -> PoolEntry:
+        """Per-device-budget admission: place on one device, or shard
+        over the whole mesh when the model cannot fit any single one."""
+        ndev = len(self.devices)
+        if need <= self.byte_budget:
+            dev = self._pick_device(model.version, need)
+            if dev is None:
+                raise PoolBudgetError(
+                    f"cannot admit {model.version!r} ({need} bytes): every "
+                    f"device's budget is pinned by live submissions",
+                    retryable=True)
+            self._evict_device_until(dev, self.byte_budget - need)
+            engine = self._engine_factory(model, device=self.devices[dev])
+            self._homes[model.version] = dev
+            return PoolEntry(engine=engine, nbytes=need,
+                             devices=(dev,), dev_bytes=need)
+        per = -(-need // ndev)          # ceil: bytes charged per device
+        if self.mesh is not None and per <= self.byte_budget:
+            if any(self._pinned_device_bytes(i) + per > self.byte_budget
+                   for i in range(ndev)):
+                raise PoolBudgetError(
+                    f"cannot admit sharded {model.version!r} ({per} "
+                    f"bytes/device): pinned residents block the room",
+                    retryable=True)
+            for i in range(ndev):
+                self._evict_device_until(i, self.byte_budget - per)
+            engine = self._engine_factory(model, mesh=self.mesh)
+            self.stats.sharded_admissions += 1
+            return PoolEntry(engine=engine, nbytes=need,
+                             devices=tuple(range(ndev)), dev_bytes=per)
+        raise PoolBudgetError(
+            f"model {model.version!r} needs {need} bytes but the "
+            f"per-device budget is {self.byte_budget}"
+            + ("" if self.mesh is not None
+               else " (no mesh: sharded admission unavailable)"),
+            retryable=False)
 
     def engine_for(self, qsig: str, probe: Iterable[str] = (), *,
                    optimize: bool = True) -> Engine:
         """``resolve`` + ``admit`` in one call (the no-retry path)."""
         return self.admit(self.resolve(qsig, probe, optimize=optimize))
 
-    def _evict_until(self, budget: int) -> None:
-        """Evict least-recently-used unpinned entries until resident
-        bytes fit in ``budget``; deterministic (LRU order)."""
-        while self.resident_bytes > budget:
-            victim = next((v for v in self._entries if not self.pinned(v)),
-                          None)
+    def _evict_lru(self, over_budget: Callable[[], bool],
+                   occupies: Callable[[PoolEntry], bool]) -> None:
+        """The one eviction loop both pools share: pop the least-
+        recently-used unpinned entry satisfying ``occupies`` until
+        ``over_budget()`` clears (or only pinned residents remain);
+        deterministic (global LRU order)."""
+        while over_budget():
+            victim = next((v for v, e in self._entries.items()
+                           if occupies(e) and not self.pinned(v)), None)
             if victim is None:
                 return
             del self._entries[victim]
             self.stats.evictions += 1
             self.eviction_log.append(victim)
+
+    def _evict_until(self, budget: int) -> None:
+        """Legacy pool: evict until total resident bytes fit."""
+        self._evict_lru(lambda: self.resident_bytes > budget,
+                        lambda e: True)
+
+    def _evict_device_until(self, dev: int, budget: int) -> None:
+        """Device-aware pool: evict entries occupying device ``dev``
+        until its charged bytes fit (a sharded entry is evictable from
+        any of its devices and frees its charge on all of them)."""
+        self._evict_lru(lambda: self.device_bytes(dev) > budget,
+                        lambda e: dev in e.devices)
 
 
 # ---------------------------------------------------------------------------
@@ -238,6 +398,7 @@ class ModelPool:
 # ---------------------------------------------------------------------------
 
 _EXHAUSTED = object()
+_WHOLE_STEP = object()      # engine lacks the step_begin/step_finish split
 
 
 @dataclass
@@ -284,6 +445,9 @@ class SchedulerStats:
     ticks: int = 0
     rows: int = 0
     wall_s: float = 0.0
+    # device fan-out: how many distinct devices had an in-flight decode
+    # step dispatched in the same tick (1 on a single-device pool)
+    peak_concurrent_devices: int = 1
 
     @property
     def rows_per_s(self) -> float:
@@ -394,14 +558,43 @@ class Scheduler:
         if n:
             self._rr = (self._rr + 1) % n
         # one decode tick per distinct engine with work, in activation
-        # order (deterministic)
+        # order (deterministic).  Fan-out: DISPATCH every engine's tick
+        # (step_begin launches the decode asynchronously) before
+        # COLLECTING any of them — engines placed on distinct devices
+        # overlap their decode steps instead of serializing.  Ordering
+        # and per-engine sequencing are unchanged, so outputs stay
+        # byte-identical to stepping each engine to completion in turn.
         engines: "OrderedDict[int, Engine]" = OrderedDict()
         for sub in self.active:
             engines.setdefault(id(sub.engine), sub.engine)
+        pending: List[Tuple[int, Engine, Any]] = []
+        devs: Set[Any] = set()
         for eid, eng in engines.items():
             if not eng.has_work():
                 continue
-            for req in eng.step():
+            if hasattr(eng, "step_begin"):
+                handle = eng.step_begin()
+                pending.append((eid, eng, handle))
+                # count only placements with a decode genuinely in
+                # flight: a tick whose rows all retired at admission
+                # (handle.nxt is None) overlapped nothing, and split-
+                # less fallback engines run serially at collect time.
+                # A mesh-sharded engine's decode occupies EVERY mesh
+                # device, so each one counts.
+                if handle.nxt is not None:
+                    mesh = getattr(eng, "mesh", None)
+                    if mesh is not None:
+                        devs.update(mesh.devices.flat)
+                    else:
+                        devs.add(getattr(eng, "device", None))
+            else:            # fakes / remote backends without the split
+                pending.append((eid, eng, _WHOLE_STEP))
+        self.stats.peak_concurrent_devices = max(
+            self.stats.peak_concurrent_devices, len(devs))
+        for eid, eng, handle in pending:
+            reqs = (eng.step() if handle is _WHOLE_STEP
+                    else eng.step_finish(handle))
+            for req in reqs:
                 owner = self._owners.pop((eid, req.rid), None)
                 if owner is not None:
                     owner.inflight.discard(req.rid)

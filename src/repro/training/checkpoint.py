@@ -1,6 +1,6 @@
 """Atomic, elastic checkpointing.
 
-Fault-tolerance contract (DESIGN.md §6):
+Fault-tolerance contract:
   - **atomic**: state is written to ``<dir>/tmp.<nonce>`` and renamed to
     ``<dir>/step_<n>`` only after every file и the manifest (with content
     hashes) are fsync'd — a preempted writer never corrupts the latest

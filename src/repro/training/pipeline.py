@@ -1,5 +1,5 @@
 """Pipeline parallelism: GPipe-style microbatch pipelining over a
-``stage`` mesh axis (DESIGN.md §6 — off in the graded dry-run, whose
+``stage`` mesh axis (off in the graded dry-run, whose
 production mesh fixes axes to pod/data/model; provided for users whose
 mesh exposes a stage axis).
 

@@ -1,8 +1,18 @@
 import os
 
-# keep tests on 1 CPU device (the dry-run sets its own 512-device flag in a
-# subprocess); cap compilation parallelism for the single-core container.
+# CPU platform, forced to 4 host devices so the device-parallel serving
+# tests (test_device_parallel.py) exercise real multi-device placement
+# in-process.  Everything else still runs on device 0 by default, and
+# the dry-run subprocesses (test_distributed.py) override XLA_FLAGS
+# with their own 8/512-device values.  An operator-set XLA_FLAGS that
+# already forces a device count wins; the quad_devices fixture below
+# then skips (not fails) when fewer than 4 devices came up.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4").strip()
 
 import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -20,6 +30,18 @@ from repro.models import api  # noqa: E402
 
 FAST_ARCHS = ("mistral-nemo-12b", "gemma2-2b", "qwen2-moe-a2.7b",
               "rwkv6-3b", "zamba2-7b", "whisper-base")
+
+
+@pytest.fixture(scope="session")
+def quad_devices():
+    """The first 4 CPU devices of the forced multi-device platform;
+    skip-not-fail when the platform came up with fewer (e.g. an
+    operator-set XLA_FLAGS overrode the conftest default)."""
+    devs = jax.devices()
+    if len(devs) < 4:
+        pytest.skip("needs >= 4 jax devices (run with XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=4)")
+    return devs[:4]
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,329 @@
+"""Device-parallel serving: per-device pool budgets, placement policy,
+sharded (TP) admission, and the scheduler tick fan-out.
+
+Pool mechanics run on fake engines/devices (no model compute); the
+byte-identity and TP tests build real engines on the forced 4-device
+CPU platform (conftest) and skip-not-fail when it is unavailable.
+"""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.serving.scheduler import ModelPool, PoolBudgetError, Scheduler
+
+from test_scheduler import FakeEngine, FakeSession
+
+
+# ---------------------------------------------------------------------------
+# fakes: device-aware pool mechanics without jax devices
+# ---------------------------------------------------------------------------
+
+class PlacedFakeEngine(FakeEngine):
+    def __init__(self, version, slots=2, device=None, mesh=None):
+        super().__init__(version, slots=slots)
+        self.device = device
+        self.mesh = mesh
+
+
+def fake_mesh(n):
+    """Duck-typed Mesh: the pool only reads ``.devices.flat``."""
+    return SimpleNamespace(devices=np.array([f"dev{i}" for i in range(n)],
+                                            dtype=object))
+
+
+def placed_pool(sizes, budget, *, ndev=3, mesh=False, slots=2,
+                placement="least_loaded"):
+    sess = FakeSession(sizes)
+    kw = dict(
+        engine_factory=lambda m, device=None, mesh=None: PlacedFakeEngine(
+            m.version, slots=slots, device=device, mesh=mesh),
+        entry_bytes=lambda m: sizes[m.version],
+        placement=placement)
+    if mesh:
+        pool = ModelPool(sess, budget, mesh=fake_mesh(ndev), **kw)
+    else:
+        pool = ModelPool(sess, budget,
+                         devices=[f"dev{i}" for i in range(ndev)], **kw)
+    return sess, pool
+
+
+class TestPerDeviceBudget:
+    def test_budget_is_per_device_hard_invariant(self):
+        """Any admission sequence keeps every device's charged bytes
+        within the per-device budget."""
+        sizes = {f"m{i}": 30 + 7 * (i % 3) for i in range(12)}
+        _, pool = placed_pool(sizes, budget=100, ndev=3)
+        for i in range(12):
+            try:
+                pool.engine_for(f"m{i}")
+            except PoolBudgetError:
+                pass
+            for d in range(3):
+                assert pool.device_bytes(d) <= pool.byte_budget
+
+    def test_capacity_scales_with_device_count(self):
+        sizes = {f"m{i}": 40 for i in range(8)}
+        _, pool1 = placed_pool(sizes, budget=100, ndev=1)
+        _, pool4 = placed_pool(sizes, budget=100, ndev=4)
+        for i in range(8):
+            pool1.engine_for(f"m{i}")
+            pool4.engine_for(f"m{i}")
+        assert len(pool1) == 2          # 2 x 40 <= 100
+        assert len(pool4) == 8          # 2 per device x 4 devices
+
+    def test_least_loaded_placement_spreads_and_is_deterministic(self):
+        sizes = {f"m{i}": 40 for i in range(6)}
+        placements = []
+        for _ in range(2):
+            _, pool = placed_pool(sizes, budget=100, ndev=3)
+            for i in range(6):
+                pool.engine_for(f"m{i}")
+            placements.append([pool.placement_of(f"m{i}")[0]
+                               for i in range(6)])
+        # identical replay -> identical placement (lowest index ties)
+        assert placements[0] == placements[1]
+        # least-loaded spreads before stacking: first 3 land on 3
+        # distinct devices, next 3 fill them up again in the same order
+        assert placements[0] == [0, 1, 2, 0, 1, 2]
+
+    def test_eviction_is_per_device_lru(self):
+        """Filling device 0 twice over evicts only ITS resident; other
+        devices' warm engines survive."""
+        sizes = {"a": 80, "b": 80, "c": 80, "d": 80}
+        _, pool = placed_pool(sizes, budget=100, ndev=3)
+        for v in ("a", "b", "c"):       # one per device
+            pool.engine_for(v)
+        pool.engine_for("d")            # least-loaded tie -> device 0
+        assert pool.eviction_log == ["a"]
+        assert pool.placement_of("d") == (0,)
+        assert pool.resident_versions == ["b", "c", "d"]
+
+    def test_pinned_devices_block_retryable(self):
+        sizes = {"a": 80, "b": 80}
+        _, pool = placed_pool(sizes, budget=100, ndev=1)
+        pool.engine_for("a")
+        pool.pin("a")
+        with pytest.raises(PoolBudgetError) as ei:
+            pool.engine_for("b")
+        assert ei.value.retryable
+        pool.unpin("a")
+        pool.engine_for("b")
+        assert pool.eviction_log == ["a"]
+
+
+class TestAffinityPlacement:
+    def test_readmission_returns_home(self):
+        """Affinity: an evicted version re-admits to its previous
+        device, so same-placement caches stay reusable."""
+        sizes = {"a": 80, "b": 80, "c": 80, "d": 80}
+        _, pool = placed_pool(sizes, budget=100, ndev=2,
+                              placement="affinity")
+        pool.engine_for("a")            # dev 0
+        pool.engine_for("b")            # dev 1
+        home_a = pool.placement_of("a")[0]
+        pool.engine_for("c")            # evicts a (LRU on its device)
+        assert "a" not in pool.resident_versions
+        pool.engine_for("a")            # back home, evicting c
+        assert pool.placement_of("a") == (home_a,)
+
+    def test_affinity_falls_back_when_home_pinned(self):
+        sizes = {"a": 80, "b": 80, "c": 80}
+        _, pool = placed_pool(sizes, budget=100, ndev=2,
+                              placement="affinity")
+        pool.engine_for("a")
+        pool.engine_for("c")            # dev 1 (least loaded)
+        pool.pin("a")                   # dev 0 fully pinned
+        pool.engine_for("b")            # must land on dev 1, evicting c
+        assert pool.placement_of("b") == (1,)
+        assert "c" not in pool.resident_versions
+        pool.engine_for("c")            # re-admits to its home, dev 1
+        assert pool.placement_of("c") == (1,)
+
+
+class TestShardedAdmission:
+    def test_oversize_without_mesh_is_unretryable(self):
+        _, pool = placed_pool({"big": 250}, budget=100, ndev=3)
+        with pytest.raises(PoolBudgetError) as ei:
+            pool.engine_for("big")
+        assert not ei.value.retryable
+
+    def test_oversize_with_mesh_shards_across_all_devices(self):
+        sizes = {"big": 250, "small": 10}
+        _, pool = placed_pool(sizes, budget=100, ndev=3, mesh=True)
+        eng = pool.engine_for("big")
+        assert eng.mesh is not None and eng.device is None
+        assert pool.placement_of("big") == (0, 1, 2)
+        assert pool.stats.sharded_admissions == 1
+        # ceil(250/3) = 84 charged per device
+        for d in range(3):
+            assert pool.device_bytes(d) == 84
+        # a replica still places beside the sharded entry (84+10 <= 100)
+        small = pool.engine_for("small")
+        assert small.device is not None and small.mesh is None
+        assert len(pool.placement_of("small")) == 1
+        assert "big" in pool.resident_versions
+
+    def test_sharded_beyond_mesh_is_unretryable(self):
+        _, pool = placed_pool({"huge": 1000}, budget=100, ndev=3,
+                              mesh=True)
+        with pytest.raises(PoolBudgetError) as ei:
+            pool.engine_for("huge")     # ceil(1000/3) > 100
+        assert not ei.value.retryable
+
+    def test_sharded_eviction_frees_every_device(self):
+        sizes = {"big": 250, "a": 90, "b": 90, "c": 90}
+        _, pool = placed_pool(sizes, budget=100, ndev=3, mesh=True)
+        pool.engine_for("big")
+        for v in ("a", "b", "c"):       # each needs 90: big must go
+            pool.engine_for(v)
+        assert "big" not in pool.resident_versions
+        assert pool.eviction_log[0] == "big"
+        assert {pool.placement_of(v)[0] for v in "abc"} == {0, 1, 2}
+
+
+class TestSchedulerFanOut:
+    def test_fake_engines_without_split_still_work(self):
+        """Engines lacking step_begin/step_finish (fakes, remote
+        backends) fall back to whole step() inside the fan-out tick —
+        and, running serially, never count as concurrent devices."""
+        sizes = {"a": 40, "b": 40}
+        _, pool = placed_pool(sizes, budget=100, ndev=2)
+        sched = Scheduler(pool, share=2)
+        sa = sched.submit("ta", ["x", "yy"], qsig="a")
+        sb = sched.submit("tb", ["zzz"], qsig="b")
+        sched.run()
+        assert sa.results() == ["out(x)", "out(yy)"]
+        assert sb.results() == ["out(zzz)"]
+        assert sched.stats.peak_concurrent_devices == 1
+
+
+# ---------------------------------------------------------------------------
+# real engines on the forced 4-device platform
+# ---------------------------------------------------------------------------
+
+ENGINE_KW = dict(slots=2, max_len=64, buckets=(24,))
+
+
+class _SameParamsSession:
+    """Duck-typed session: every qsig resolves to the SAME params under
+    a distinct version, so the pool builds real engines per tenant
+    without paying a compression search."""
+
+    def __init__(self, params, cfg, tok):
+        self.params, self.cfg, self.tok = params, cfg, tok
+
+    def _optimize(self, qsig, probe):
+        return SimpleNamespace(params=self.params, cfg=self.cfg,
+                               version=qsig)
+
+
+@pytest.fixture(scope="module")
+def quad_pool_env(tiny_dense):
+    from repro.training.data import ByteTokenizer
+    cfg, params = tiny_dense
+    tok = ByteTokenizer(max(cfg.vocab_size, 260))
+    return cfg, params, tok
+
+
+def test_fanout_outputs_byte_identical_to_serial(quad_pool_env,
+                                                 quad_devices):
+    """Tenants placed on 4 distinct devices, stepped with the
+    dispatch-all-then-collect fan-out, produce exactly the tokens each
+    would get on a private single-device engine run serially."""
+    from repro.core.compressed import param_bytes
+    from repro.serving.engine import Engine
+    from repro.serving.scheduler import slot_state_bytes
+    cfg, params, tok = quad_pool_env
+    entry = (param_bytes(params)
+             + ENGINE_KW["slots"] * slot_state_bytes(cfg,
+                                                     ENGINE_KW["max_len"]))
+    sess = _SameParamsSession(params, cfg, tok)
+    pool = ModelPool(sess, int(1.5 * entry), engine_kw=ENGINE_KW,
+                     devices=quad_devices)
+    sched = Scheduler(pool, share=2)
+    prompts = {f"t{i}": [f"tenant {i} row {j}" for j in range(3)]
+               for i in range(4)}
+    subs = [sched.submit(t, ps, qsig=t, max_new=8)
+            for t, ps in prompts.items()]
+    sched.run()
+    # all 4 tenants resident, one per device, stepped concurrently
+    assert len(pool) == 4
+    assert sorted(pool.placement_of(f"t{i}")[0] for i in range(4)) \
+        == [0, 1, 2, 3]
+    assert sched.stats.peak_concurrent_devices == 4
+    for sub in subs:
+        ref = Engine(params, cfg, tokenizer=tok, version=sub.qsig,
+                     **ENGINE_KW).generate(prompts[sub.tenant], max_new=8)
+        assert sub.results() == ref
+
+
+def test_tp_engine_coexists_and_matches_serial_mesh_run(quad_pool_env,
+                                                        quad_devices):
+    """A tensor-parallel (mesh-sharded) engine admitted beside
+    single-device replicas: scheduler outputs equal a private engine
+    with the SAME placement run serially (the byte-identity contract
+    is about scheduling, not numerics-across-placements)."""
+    import jax
+    from repro.serving.engine import Engine
+    cfg, params, tok = quad_pool_env
+    mesh = jax.make_mesh((1, 4), ("data", "model"), devices=quad_devices)
+    sess = _SameParamsSession(params, cfg, tok)
+    # big shards at ceil(300/4)=75 per device, leaving 25: the smalls
+    # (20) coexist beside it instead of queueing behind its pins
+    sizes = {"big": 300, "small0": 20, "small1": 20}
+    pool = ModelPool(sess, 100, engine_kw=ENGINE_KW, mesh=mesh,
+                     entry_bytes=lambda m: sizes[m.version])
+    sched = Scheduler(pool, share=2)
+    prompts = {"big": ["alpha row", "beta row"],
+               "small0": ["gamma row"], "small1": ["delta row"]}
+    subs = [sched.submit(v, ps, qsig=v, max_new=8)
+            for v, ps in prompts.items()]
+    sched.run()
+    assert pool.stats.sharded_admissions == 1
+    assert pool.placement_of("big") == (0, 1, 2, 3)
+    for sub in subs:
+        kw = dict(ENGINE_KW)
+        if sub.qsig == "big":
+            kw["mesh"] = jax.make_mesh((1, 4), ("data", "model"),
+                                       devices=quad_devices)
+        ref = Engine(params, cfg, tokenizer=tok, version=sub.qsig,
+                     **kw).generate(prompts[sub.tenant], max_new=8)
+        assert sub.results() == ref
+
+
+def test_tp_greedy_decode_matches_single_device(quad_pool_env,
+                                                quad_devices):
+    """Greedy decode through the TP-sharded engine reproduces the
+    single-device token stream on this pinned jax version (tiny dims
+    divide the model axis; GSPMD psum order is stable on CPU)."""
+    import jax
+    from repro.serving.engine import Engine
+    cfg, params, tok = quad_pool_env
+    mesh = jax.make_mesh((1, 4), ("data", "model"), devices=quad_devices)
+    texts = ["hello tensor parallel", "another row"]
+    tp = Engine(params, cfg, tokenizer=tok, mesh=mesh,
+                **ENGINE_KW).generate(texts, max_new=8)
+    single = Engine(params, cfg, tokenizer=tok,
+                    **ENGINE_KW).generate(texts, max_new=8)
+    assert tp == single
+
+
+def test_prefix_cache_keys_isolated_per_placement(quad_pool_env,
+                                                  quad_devices):
+    """One shared PrefixCache across engines on different devices must
+    never hand device-A state to a device-B engine: placement is part
+    of the key, so each placement prefills its own entry."""
+    from repro.serving.cache import PrefixCache
+    from repro.serving.engine import Engine
+    cfg, params, tok = quad_pool_env
+    shared = PrefixCache(capacity=8)
+    tmpl = "fix this value: "
+    outs = []
+    for d in quad_devices[:2]:
+        eng = Engine(params, cfg, tokenizer=tok, device=d,
+                     prefix_cache=shared, **ENGINE_KW)
+        outs.append(eng.generate([tmpl + "pyton", tmpl + "jva"],
+                                 max_new=6, prefix=tmpl))
+    assert outs[0] == outs[1]           # same params, same tokens
+    assert len(shared) == 2             # one entry per placement, no mix

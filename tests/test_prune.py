@@ -83,8 +83,8 @@ def test_prune_composes_with_decode(reduced_models):
 
 
 def test_rwkv_head_prune_is_noop(reduced_models):
-    """Attention-head pruning is inapplicable to rwkv (DESIGN.md
-    §Arch-applicability) — must be an identity, not an error."""
+    """Attention-head pruning is inapplicable to rwkv — must be an
+    identity, not an error."""
     cfg, params, batch, stats = _calib("rwkv6-3b", reduced_models)
     p2, c2, _ = P.prune_kv_groups(params, cfg, stats, keep=1)
     assert c2.n_kv_heads == cfg.n_kv_heads

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Docs-consistency check: every file path referenced in the
+architecture doc and the module READMEs must exist in the tree.
+
+  python tools/check_docs.py          # exit 1 + listing on dead refs
+
+A "path reference" is a backticked token or relative markdown-link
+target that looks like a file path (contains a slash, ends in a known
+extension).  ``path:line`` anchors are checked by path only — line
+numbers drift with edits and the named symbols are the stable part.
+Candidates are resolved against the repo root and the ``src/`` /
+``src/repro/`` prefixes (module READMEs refer to siblings that way).
+Runtime artifacts under ``results/`` (gitignored), globs, and URLs are
+exempt.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+DOCS = [
+    "docs/ARCHITECTURE.md",
+    "README.md",
+    "src/repro/serving/README.md",
+    "src/repro/core/README.md",
+    "src/repro/distributed/README.md",
+]
+
+PREFIXES = ("", "src/", "src/repro/")
+EXTS = (".py", ".md", ".yml", ".yaml", ".toml", ".txt", ".json", ".sh")
+PATHISH = re.compile(r"^[\w./-]+$")
+CODE = re.compile(r"`([^`]+)`")
+LINK = re.compile(r"\]\(([^)#\s]+)")
+
+
+def candidates(text):
+    for m in CODE.finditer(text):
+        tok = m.group(1).strip().split()[0] if m.group(1).strip() else ""
+        tok = tok.split(":")[0]          # drop :line anchors
+        if ("/" in tok and tok.endswith(EXTS) and "*" not in tok
+                and PATHISH.match(tok)):
+            yield tok
+    for m in LINK.finditer(text):
+        tok = m.group(1).strip().strip("`")
+        if tok and not tok.startswith(("http://", "https://", "../",
+                                       "mailto:")):
+            yield tok
+
+
+def resolves(tok: str) -> bool:
+    if tok.startswith("results/"):       # runtime artifacts, gitignored
+        return True
+    return any(os.path.exists(os.path.join(ROOT, pre, tok))
+               for pre in PREFIXES)
+
+
+def main() -> int:
+    dead = []
+    for doc in DOCS:
+        path = os.path.join(ROOT, doc)
+        if not os.path.exists(path):
+            dead.append((doc, "<the doc itself is missing>"))
+            continue
+        with open(path) as f:
+            text = f.read()
+        for tok in sorted(set(candidates(text))):
+            if not resolves(tok):
+                dead.append((doc, tok))
+    if dead:
+        print("docs-consistency check FAILED — dead file references:")
+        for doc, tok in dead:
+            print(f"  {doc}: {tok}")
+        return 1
+    print(f"docs-consistency check OK ({len(DOCS)} docs scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
