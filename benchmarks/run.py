@@ -1,39 +1,66 @@
 """Benchmark entry point: one section per paper table/figure.
 
-  table1       paper Table 1  (throughput / size / accuracy x 3 workloads)
-  ablation     compression-recipe grid (extends the paper's 2 variants)
-  runtime_opts caching + batching gains (paper §3.3)
-  serving      async core grid: rows/s + slot utilization vs slots x
-               buckets x sampler, base vs int8
-  multi_tenant aggregate rows/s vs tenant count under a fixed pool byte
-               budget, per-tenant base vs instance-optimized fleets
-  device_parallel
-               the fleet across a (forced) 4-device mesh: 1 vs 4
-               devices, TP base vs compressed replicas
-  roofline     dry-run roofline table (§Roofline; needs results/dryrun.json)
+  python benchmarks/run.py                 # run every section
+  python benchmarks/run.py --list          # enumerate sections
+  python benchmarks/run.py --only serving  # run one section
 
 Prints ``name,us_per_call,derived`` CSV lines throughout.
 """
+import argparse
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# section name -> (module, one-line description); order is run order
+SECTIONS = {
+    "table1": ("benchmarks.table1",
+               "paper Table 1 (throughput / size / accuracy x 3 "
+               "workloads)"),
+    "ablation": ("benchmarks.ablation",
+                 "compression-recipe grid (extends the paper's 2 "
+                 "variants)"),
+    "runtime_opts": ("benchmarks.runtime_opts",
+                     "caching + batching gains (paper §3.3)"),
+    "serving": ("benchmarks.serving",
+                "async core grid: rows/s + slot utilization vs slots x "
+                "buckets x sampler, base vs int8"),
+    "optimizer": ("benchmarks.optimizer",
+                  "semantic plan rules on vs off: LLM row invocations "
+                  "(pushdown + dedup + fusion)"),
+    "multi_tenant": ("benchmarks.multi_tenant",
+                     "aggregate rows/s vs tenant count under a fixed "
+                     "pool byte budget"),
+    "device_parallel": ("benchmarks.device_parallel",
+                        "the fleet across a (forced) 4-device mesh: 1 "
+                        "vs 4 devices, TP base vs compressed replicas"),
+    "roofline": ("benchmarks.roofline",
+                 "dry-run roofline table (needs results/dryrun.json)"),
+}
+
 
 def main() -> None:
-    from benchmarks import (ablation, device_parallel, multi_tenant,
-                            roofline, runtime_opts, serving, table1)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--list", action="store_true",
+                    help="enumerate benchmark sections and exit")
+    ap.add_argument("--only", default=None, choices=sorted(SECTIONS),
+                    help="run a single section")
+    args = ap.parse_args()
+
+    if args.list:
+        for name, (_, desc) in SECTIONS.items():
+            print(f"{name:16s} {desc}")
+        return
+
+    import importlib
+
     from benchmarks.common import Csv
     csv = Csv()
     print("== IOLM-DB benchmark suite ==")
-    table1.main(csv)
-    ablation.main(csv)
-    runtime_opts.main(csv)
-    serving.main(csv)
-    multi_tenant.main(csv)
-    device_parallel.main(csv)
-    roofline.main(csv)
+    names = [args.only] if args.only else list(SECTIONS)
+    for name in names:
+        importlib.import_module(SECTIONS[name][0]).main(csv)
     print("\n== CSV summary ==")
     for line in csv.lines:
         print(line)

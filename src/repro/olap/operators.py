@@ -1,9 +1,13 @@
 """LLM operators: first-class per-row model invocation inside queries.
 
-The paper's three workloads as relational operators:
+The paper's three workloads as relational operators, plus a semantic
+predicate:
   - ``llm_map``     (summarization): prompt per row -> new column
   - ``llm_correct`` (data correction): fix each value in a column
   - ``llm_join``    (fuzzy join): semantic row matching across tables
+  - ``llm_filter``  (semantic predicate): keep rows the model affirms
+  - ``fused_spec``  (optimizer-only): adjacent same-template ops
+    merged into one model pass writing several columns
 
 Each operator is built from an ``OpSpec``: a lazy prompt stream plus a
 ``finish`` closure that turns the model outputs back into a Table.
@@ -50,19 +54,83 @@ class OpSpec:
     prefix: Optional[str]
 
 
+def _dedup_plan(values) -> Tuple[List[str], Callable[[List[str]], List[str]]]:
+    """Unique stringified values in first-seen order, plus a scatter
+    closure mapping per-unique outputs back to per-row outputs.
+    Greedy decode is deterministic per prompt, so invoking once per
+    unique value is byte-identical to invoking per row."""
+    first: dict = {}
+    order: List[str] = []
+    idx_of: List[int] = []
+    for v in values:
+        s = str(v)
+        if s not in first:
+            first[s] = len(order)
+            order.append(s)
+        idx_of.append(first[s])
+    return order, lambda uouts: [uouts[i] for i in idx_of]
+
+
+def _rowwise_spec(kind: str, table: Table, col: str, prompt: str,
+                  max_new: int, finish_rows: Callable[[List[str]], Table],
+                  *, dedup: bool) -> OpSpec:
+    """Shared shape of map/correct/llm_filter/fused: one prompt per row
+    of ``col``, with an optional dedup wrapper (submit unique values
+    only, scatter outputs back before ``finish_rows``)."""
+    if dedup:
+        uniq, scatter = _dedup_plan(table[col])
+        return OpSpec(kind, (prompt + u for u in uniq),
+                      lambda outs: finish_rows(scatter(outs)),
+                      max_new, prompt)
+    return OpSpec(kind, (prompt + str(v) for v in table[col]),
+                  finish_rows, max_new, prompt)
+
+
 def map_spec(table: Table, col: str, *, prompt: str = PROMPTS["summarize"],
-             out_col: str = "summary", max_new: int = 24) -> OpSpec:
-    return OpSpec("map", (prompt + str(v) for v in table[col]),
-                  lambda outs: table.with_column(out_col, outs),
-                  max_new, prompt)
+             out_col: str = "summary", max_new: int = 24,
+             dedup: bool = False) -> OpSpec:
+    return _rowwise_spec("map", table, col, prompt, max_new,
+                         lambda outs: table.with_column(out_col, outs),
+                         dedup=dedup)
 
 
 def correct_spec(table: Table, col: str, *, prompt: str = PROMPTS["correct"],
-                 out_col: Optional[str] = None, max_new: int = 16) -> OpSpec:
-    return OpSpec("correct", (prompt + str(v) for v in table[col]),
-                  lambda outs: table.with_column(out_col or col + "_fixed",
-                                                 outs),
-                  max_new, prompt)
+                 out_col: Optional[str] = None, max_new: int = 16,
+                 dedup: bool = False) -> OpSpec:
+    return _rowwise_spec("correct", table, col, prompt, max_new,
+                         lambda outs: table.with_column(
+                             out_col or col + "_fixed", outs),
+                         dedup=dedup)
+
+
+def filter_spec(table: Table, col: str, *, prompt: str, max_new: int = 8,
+                keep: Optional[Callable[[str], bool]] = None,
+                dedup: bool = False) -> OpSpec:
+    """Semantic predicate: keep rows whose model output passes
+    ``keep`` (default: affirmative prefix — yes/keep/same/true)."""
+    from repro.olap.plan import default_keep
+    keep = keep or default_keep
+
+    def finish_rows(outs: List[str]) -> Table:
+        return table.take([i for i, o in enumerate(outs) if keep(o)])
+
+    return _rowwise_spec("llm_filter", table, col, prompt, max_new,
+                         finish_rows, dedup=dedup)
+
+
+def fused_spec(table: Table, col: str, *, prompt: str,
+               outs: Tuple[str, ...], max_new: int,
+               dedup: bool = False) -> OpSpec:
+    """Fusion of adjacent same-(col, prompt) ops: one prompt stream,
+    outputs fanned to every column in ``outs`` (original op order)."""
+    def finish_rows(vals: List[str]) -> Table:
+        t = table
+        for o in outs:
+            t = t.with_column(o, vals)
+        return t
+
+    return _rowwise_spec("fused", table, col, prompt, max_new,
+                         finish_rows, dedup=dedup)
 
 
 def join_spec(left: Table, right: Table, on: Tuple[str, str], *,
@@ -138,6 +206,15 @@ def llm_correct(table: Table, col: str, engine: Engine, *,
     """Per-row error correction of a column (typos, format drift)."""
     return run_spec(correct_spec(table, col, prompt=prompt, out_col=out_col,
                                  max_new=max_new), engine, chunk=chunk)
+
+
+def llm_filter(table: Table, col: str, engine: Engine, *, prompt: str,
+               max_new: int = 8,
+               keep: Optional[Callable[[str], bool]] = None,
+               chunk: int = DEFAULT_CHUNK) -> Table:
+    """SELECT * FROM table WHERE LLM('<prompt> ' || col) ≈ 'yes'."""
+    return run_spec(filter_spec(table, col, prompt=prompt, max_new=max_new,
+                                keep=keep), engine, chunk=chunk)
 
 
 def _block_key(v: str) -> str:

@@ -1,0 +1,172 @@
+"""Physical planner: lower an optimized logical plan to executable ops.
+
+Lowering walks the (optimizer-rewritten) chain Scan -> root and emits
+one physical step per node:
+
+  - non-LLM nodes (``Filter``/``Select``) become ``TableStep``s — pure
+    Table -> Table functions executed inline by whichever executor
+    drives the plan;
+  - LLM nodes become ``PhysicalOp``s annotated with everything an
+    executor needs to route the work: the model-cache query signature
+    ``qsig``, the **engine choice** (``"optimized"`` = run the
+    instance-optimization workflow and serve from the compressed
+    recipe, ``"base"`` = the uncompressed model), the **pool
+    placement** (``"pool"`` when the session schedules engines through
+    a shared byte-budgeted ``ModelPool``, ``"private"`` for a
+    per-operator engine), the shared **prefix template**, and the
+    dedup flag + cost estimate the optimizer attached.
+
+Execution is a *generator protocol* shared by both executors (the
+serial ``Query.run`` and the multi-tenant ``Scheduler.run_queries``):
+``execute(pplan)`` yields one ``ExecutableOp`` per LLM step — probe
+sample and dedup-wrapped ``OpSpec`` built against the table state at
+that point — and expects the executor to ``send`` back the output rows
+(one per spec prompt); the final Table travels out via
+``StopIteration.value``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Union
+
+from repro.olap import operators as OPS
+from repro.olap import optimizer as OPT
+from repro.olap import plan as P
+from repro.olap.table import Table
+
+
+@dataclass
+class TableStep:
+    """A non-LLM step: pure table transform, runs inline."""
+    node: P.PlanNode
+    apply: Callable[[Table], Table]
+
+
+@dataclass
+class PhysicalOp:
+    """Static annotation of one LLM step (what EXPLAIN renders)."""
+    node: P.PlanNode
+    qsig: str
+    engine: str          # "optimized" | "base"
+    placement: str       # "pool" | "private"
+    prefix: str
+    dedup: bool
+    max_new: int
+    est: OPT.NodeEst
+
+
+@dataclass
+class PhysicalPlan:
+    logical: P.PlanNode              # the plan as built
+    optimized: P.PlanNode            # after rule rewriting
+    steps: List[Union[TableStep, PhysicalOp]]     # Scan -> root order
+    firings: List[OPT.RuleFiring]
+    est: Dict[int, OPT.NodeEst]      # id(node) -> estimate (optimized)
+    logical_cost: int
+    optimized_cost: int
+
+    @property
+    def llm_ops(self) -> List[PhysicalOp]:
+        return [s for s in self.steps if isinstance(s, PhysicalOp)]
+
+
+@dataclass
+class ExecutableOp:
+    """One LLM step, bound to the live table state: ready to route to
+    an engine.  ``spec.prompts`` is the (dedup-wrapped) prompt stream;
+    the executor sends the aligned outputs back into the generator."""
+    qsig: str
+    probe: List[str]
+    spec: OPS.OpSpec
+    optimize: bool       # engine choice as a routing bool
+    op: PhysicalOp
+
+
+def lower(logical: P.PlanNode, *, optimize_models: bool = True,
+          pooled: bool = False, use_optimizer: bool = True) -> PhysicalPlan:
+    """plan -> optimize -> physical steps."""
+    P.validate(logical)
+    stats = OPT.column_stats(P.scan_of(logical).table)
+    logical_cost = OPT.total_cost(logical, stats)
+    if use_optimizer:
+        optimized, firings = OPT.optimize(logical, stats)
+    else:
+        optimized, firings = logical, []
+    est = OPT.estimate(optimized, stats)
+    engine = "optimized" if optimize_models else "base"
+    placement = "pool" if pooled else "private"
+    steps: List[Union[TableStep, PhysicalOp]] = []
+    for node in reversed(P.chain(optimized)):
+        if isinstance(node, P.Scan):
+            continue
+        if isinstance(node, P.Filter):
+            steps.append(TableStep(node,
+                                   lambda t, n=node: t.filter(n.pred)))
+        elif isinstance(node, P.Select):
+            steps.append(TableStep(node,
+                                   lambda t, n=node: t.select(n.cols)))
+        else:
+            steps.append(PhysicalOp(
+                node=node, qsig=P.qsig(node), engine=engine,
+                placement=placement, prefix=node.prompt,
+                dedup=getattr(node, "dedup", False),
+                max_new=node.max_new, est=est[id(node)]))
+    return PhysicalPlan(logical=logical, optimized=optimized, steps=steps,
+                        firings=firings, est=est,
+                        logical_cost=logical_cost,
+                        optimized_cost=sum(e.cost for e in est.values()))
+
+
+def build_spec(node: P.PlanNode, t: Table) -> OPS.OpSpec:
+    """The node's OpSpec against the live table state (dedup-wrapped
+    when the optimizer annotated the node)."""
+    dedup = getattr(node, "dedup", False)
+    if isinstance(node, P.LLMMap):
+        return OPS.map_spec(t, node.col, prompt=node.prompt,
+                            out_col=node.out_col, max_new=node.max_new,
+                            dedup=dedup)
+    if isinstance(node, P.LLMCorrect):
+        return OPS.correct_spec(t, node.col, prompt=node.prompt,
+                                out_col=node.out_col, max_new=node.max_new,
+                                dedup=dedup)
+    if isinstance(node, P.LLMFilter):
+        return OPS.filter_spec(t, node.col, prompt=node.prompt,
+                               max_new=node.max_new, keep=node.keep,
+                               dedup=dedup)
+    if isinstance(node, P.LLMFused):
+        return OPS.fused_spec(t, node.col, prompt=node.prompt,
+                              outs=node.outs, max_new=node.max_new,
+                              dedup=dedup)
+    if isinstance(node, P.LLMJoin):
+        return OPS.join_spec(t, node.right, node.on, prompt=node.prompt,
+                             max_new=node.max_new)
+    raise ValueError(f"not an LLM node: {node!r}")
+
+
+def build_probe(node: P.PlanNode, t: Table, n_probe: int) -> List[str]:
+    """Bounded calibration sample for the operator (the optimizer
+    reads at most calib+eval rows and a 64-row data signature); the
+    full column streams through the engine chunk-wise, never
+    materialized as prompts here."""
+    if isinstance(node, P.LLMJoin):
+        return [f"{node.prompt}{a} | {b}"
+                for a in t[node.on[0]][:32]
+                for b in node.right[node.on[1]][:2]]
+    return [node.prompt + str(v) for v in t[node.col][:n_probe]]
+
+
+def execute(pplan: PhysicalPlan, *, n_probe: int = 64):
+    """The physical plan as a coroutine of LLM-operator submissions
+    (see module docstring); both executors drive this one generator."""
+    t = P.scan_of(pplan.optimized).table
+    for step in pplan.steps:
+        if isinstance(step, TableStep):
+            t = step.apply(t)
+            continue
+        spec = build_spec(step.node, t)
+        probe = build_probe(step.node, t, n_probe)
+        outs = yield ExecutableOp(qsig=step.qsig, probe=probe, spec=spec,
+                                  optimize=step.engine == "optimized",
+                                  op=step)
+        t = spec.finish(outs)
+    return t

@@ -1,7 +1,13 @@
 """Query pipeline with LLM-operator interception (the IOLM-DB workflow).
 
-``Query`` is a lazy plan over a Table; when the plan contains an LLM
-operator and instance-optimization is enabled, execution:
+``Query`` is a fluent builder over the declarative logical plan IR
+(olap/plan.py).  Execution is staged: the plan is rewritten by the
+rule-based semantic optimizer (olap/optimizer.py — non-LLM predicate
+pushdown below LLM ops, distinct-input dedup, same-template fusion),
+lowered to annotated physical ops (olap/physical.py), and only then
+driven through engines; ``Query.explain()`` renders the whole pipeline
+without executing.  When the plan contains an LLM operator and
+instance-optimization is enabled, execution:
 
   1. draws a **calibration sample** from the operator's actual input
      column (prompt-formatted — the model sees exactly the query's
@@ -19,13 +25,16 @@ import hashlib
 import time
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from textwrap import indent
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import jax.numpy as jnp
 
 from repro.core.pipeline import InstanceOptimizer, Recipe
 from repro.core import policy as POL
 from repro.olap import operators as OPS
+from repro.olap import physical as PHYS
+from repro.olap import plan as PLAN
 from repro.olap.table import Table
 from repro.serving.engine import Engine
 from repro.serving.scheduler import ModelPool
@@ -213,100 +222,194 @@ class IOLMSession:
 
 
 # ---------------------------------------------------------------------------
-# lazy query plan
+# the fluent builder over the logical plan IR
 # ---------------------------------------------------------------------------
 
 @dataclass
-class _Op:
+class OpRunStats:
+    """Per-LLM-operator execution record from the last ``run()``.
+    ``invocations`` counts prompts actually sent to the engine — with
+    the optimizer's dedup/pushdown/fusion rules on, this is the number
+    the rules exist to shrink (benchmarks/optimizer.py measures it)."""
     kind: str
-    kwargs: Dict
+    qsig: str
+    invocations: int
 
 
 class Query:
+    """Thin fluent builder over the logical plan IR (olap/plan.py).
+
+    Each builder call appends one immutable plan node; nothing runs
+    until an executor drives the plan.  Execution is
+    plan -> optimize (olap/optimizer.py rules: pushdown, dedup,
+    fusion) -> lower (olap/physical.py) -> execute; ``explain()``
+    renders the whole pipeline with cost estimates and the rules that
+    fired.  ``optimize=`` picks the model engine (instance-optimized
+    recipe vs base); ``optimize_plan=`` toggles the plan rewriter.
+    The rules only remove, reorder, or merge model invocations whose
+    results are determined, so for a fixed model the outputs are
+    byte-identical either way.  One caveat under ``optimize=True``:
+    pushdown also shrinks the calibration probe, so
+    calibration-dependent recipes may resolve to a different
+    compressed instance — pin ``recipes=`` to a deterministic
+    weight-only recipe when exact on-vs-off equality matters (see
+    olap/README.md).
+    """
+
     def __init__(self, table: Table, session: IOLMSession, *,
-                 optimize: bool = True):
-        self.table = table
+                 optimize: bool = True, optimize_plan: bool = True):
         self.session = session
         self.optimize = optimize
-        self._plan: List[_Op] = []
+        self.optimize_plan = optimize_plan
+        self._root: PLAN.PlanNode = PLAN.Scan(table)
+        self.last_run_stats: List[OpRunStats] = []
+        # memoized lowering: (root, flags) -> PhysicalPlan, so
+        # explain-then-run describes and executes the SAME lowering
+        # instead of re-running the optimizer fixpoint per call
+        self._pplan: Optional[PHYS.PhysicalPlan] = None
+        self._pplan_key: Optional[Tuple] = None
 
+    @property
+    def table(self) -> Table:
+        return PLAN.scan_of(self._root).table
+
+    # -- builders -------------------------------------------------------
     def llm_map(self, col: str, *, prompt: str = PROMPTS["summarize"],
                 out_col: str = "summary", max_new: int = 24) -> "Query":
-        self._plan.append(_Op("map", dict(col=col, prompt=prompt,
-                                          out_col=out_col, max_new=max_new)))
+        self._root = PLAN.LLMMap(input=self._root, col=col, prompt=prompt,
+                                 out_col=out_col, max_new=max_new)
         return self
 
     def llm_correct(self, col: str, *, prompt: str = PROMPTS["correct"],
                     out_col: Optional[str] = None,
                     max_new: int = 16) -> "Query":
-        self._plan.append(_Op("correct", dict(col=col, prompt=prompt,
-                                              out_col=out_col,
-                                              max_new=max_new)))
+        self._root = PLAN.LLMCorrect(input=self._root, col=col,
+                                     prompt=prompt, out_col=out_col,
+                                     max_new=max_new)
         return self
 
     def llm_join(self, right: Table, on: Tuple[str, str], *,
                  prompt: str = PROMPTS["join"], max_new: int = 12) -> "Query":
-        self._plan.append(_Op("join", dict(right=right, on=on, prompt=prompt,
-                                           max_new=max_new)))
+        self._root = PLAN.LLMJoin(input=self._root, right=right, on=on,
+                                  prompt=prompt, max_new=max_new)
         return self
 
-    def filter(self, pred: Callable) -> "Query":
-        self._plan.append(_Op("filter", dict(pred=pred)))
+    def llm_filter(self, col: str, *, prompt: str, max_new: int = 8,
+                   keep: Optional[Callable[[str], bool]] = None) -> "Query":
+        """Semantic predicate: keep rows whose model output for
+        ``prompt + value`` passes ``keep`` (default: affirmative
+        prefix)."""
+        self._root = PLAN.LLMFilter(input=self._root, col=col,
+                                    prompt=prompt, max_new=max_new,
+                                    keep=keep or PLAN.default_keep)
         return self
 
-    def _qsig(self, op: _Op) -> str:
-        base = f"{op.kind}:{op.kwargs.get('prompt', '')}"
-        return hashlib.sha256(base.encode()).hexdigest()[:12]
+    def filter(self, pred: Callable, *,
+               columns: Optional[Iterable[str]] = None) -> "Query":
+        """Non-LLM predicate.  Declaring ``columns`` (the set the pred
+        reads) is what licenses the optimizer to push the filter below
+        column-adding LLM ops; without it the pred is opaque and only
+        moves past row-set-only ops."""
+        self._root = PLAN.Filter(
+            input=self._root, pred=pred,
+            columns=frozenset(columns) if columns is not None else None)
+        return self
 
-    def _probe(self, t: Table, op: _Op) -> List[str]:
-        """Bounded calibration sample for the operator (the optimizer
-        reads at most calib+eval rows and a 64-row data signature); the
-        full column streams through the engine chunk-wise inside the
-        operator, never materialized as prompts here."""
-        n_probe = max(64, self.session.calib_rows + self.session.eval_rows)
-        if op.kind == "join":
-            return [f"{op.kwargs['prompt']}{a} | {b}"
-                    for a in t[op.kwargs["on"][0]][:32]
-                    for b in op.kwargs["right"][op.kwargs["on"][1]][:2]]
-        return [op.kwargs["prompt"] + str(v)
-                for v in t[op.kwargs["col"]][:n_probe]]
+    def select(self, cols: Iterable[str]) -> "Query":
+        self._root = PLAN.Select(input=self._root, cols=tuple(cols))
+        return self
 
-    def _spec(self, t: Table, op: _Op) -> OPS.OpSpec:
-        if op.kind == "map":
-            return OPS.map_spec(t, op.kwargs["col"],
-                                prompt=op.kwargs["prompt"],
-                                out_col=op.kwargs["out_col"],
-                                max_new=op.kwargs["max_new"])
-        if op.kind == "correct":
-            return OPS.correct_spec(t, op.kwargs["col"],
-                                    prompt=op.kwargs["prompt"],
-                                    out_col=op.kwargs["out_col"],
-                                    max_new=op.kwargs["max_new"])
-        if op.kind == "join":
-            return OPS.join_spec(t, op.kwargs["right"], op.kwargs["on"],
-                                 prompt=op.kwargs["prompt"],
-                                 max_new=op.kwargs["max_new"])
-        raise ValueError(f"unknown LLM operator kind {op.kind!r}")
+    # -- plan access ----------------------------------------------------
+    def logical_plan(self) -> PLAN.PlanNode:
+        return self._root
 
+    def physical_plan(self) -> PHYS.PhysicalPlan:
+        """plan -> optimize -> lower, annotated with engine choice
+        (base vs instance-optimized recipe), prefix template, and pool
+        placement.  Memoized until the plan or a routing flag changes
+        (builder calls reassign ``_root``, invalidating the key)."""
+        flags = (self.optimize, self.optimize_plan,
+                 self.session.pool is not None)
+        if (self._pplan is None or self._pplan_key is None
+                or self._pplan_key[0] is not self._root
+                or self._pplan_key[1] != flags):
+            self._pplan = PHYS.lower(
+                self._root, optimize_models=self.optimize,
+                pooled=self.session.pool is not None,
+                use_optimizer=self.optimize_plan)
+            self._pplan_key = (self._root, flags)
+        return self._pplan
+
+    def explain(self) -> str:
+        """Render the optimized plan with per-node cost estimates, the
+        rules that fired, and the physical ops — without executing."""
+        pplan = self.physical_plan()
+        est = pplan.est
+
+        def annotate(node):
+            e = est.get(id(node))
+            if e is None:
+                return ""
+            if PLAN.is_llm(node):
+                return (f"(rows {e.rows_in} -> {e.rows_out}, "
+                        f"{e.invocations} calls x {e.prompt_tokens} tok "
+                        f"= cost {e.cost})")
+            return f"(rows {e.rows_in} -> {e.rows_out})"
+
+        lines = [
+            f"EXPLAIN (models: {'optimized' if self.optimize else 'base'}, "
+            f"placement: "
+            f"{'pool' if self.session.pool is not None else 'private'}, "
+            f"plan optimizer: "
+            f"{'on' if self.optimize_plan else 'off'})",
+            "",
+            "logical plan:",
+            indent(PLAN.render(pplan.logical), "  "),
+            "",
+            "optimized plan:",
+            indent(PLAN.render(pplan.optimized, annotate=annotate), "  "),
+            "",
+            "rules fired:",
+        ]
+        if pplan.firings:
+            lines += [f"  {i}. {f.rule}: {f.desc} "
+                      f"(cost {f.cost_before} -> {f.cost_after})"
+                      for i, f in enumerate(pplan.firings, 1)]
+        else:
+            lines.append("  (none)")
+        lines += ["", "physical plan:"]
+        for i, step in enumerate(pplan.steps, 1):
+            if isinstance(step, PHYS.TableStep):
+                lines.append(f"  {i}. table {step.node.kind}")
+            else:
+                lines.append(
+                    f"  {i}. llm {step.node.kind} qsig={step.qsig} "
+                    f"engine={step.engine} placement={step.placement} "
+                    f"dedup={'on' if step.dedup else 'off'} "
+                    f"est_calls={step.est.invocations} "
+                    f"prefix={step.prefix!r}")
+        ratio = (pplan.logical_cost / pplan.optimized_cost
+                 if pplan.optimized_cost else 1.0)
+        lines += ["",
+                  f"estimated LLM cost: {pplan.logical_cost} -> "
+                  f"{pplan.optimized_cost} prompt-tokens "
+                  f"({ratio:.1f}x)"]
+        return "\n".join(lines)
+
+    # -- execution ------------------------------------------------------
     def _ops(self):
-        """The plan as a coroutine of LLM-operator submissions.
-
-        Yields ``(qsig, probe, OpSpec)`` per LLM operator and expects
-        the executor to ``send`` back the output rows; filters run
-        inline.  Returns (via StopIteration.value) the final Table.
-        Both executors drive this one generator: ``run()`` serially,
-        and ``Scheduler.run_queries`` interleaving many tenants' plans
+        """The physical plan as a coroutine of LLM-operator
+        submissions: yields one ``ExecutableOp`` (olap/physical.py) per
+        LLM step — carrying qsig, probe, dedup-wrapped OpSpec, and the
+        engine-choice routing bit — and expects the executor to
+        ``send`` back the output rows; table steps run inline.
+        Returns (via StopIteration.value) the final Table.  Both
+        executors drive this one generator: ``run()`` serially, and
+        ``Scheduler.run_queries`` interleaving many tenants' plans
         concurrently.
         """
-        t = self.table
-        for op in self._plan:
-            if op.kind == "filter":
-                t = t.filter(op.kwargs["pred"])
-                continue
-            spec = self._spec(t, op)
-            outs = yield self._qsig(op), self._probe(t, op), spec
-            t = spec.finish(outs)
-        return t
+        n_probe = max(64, self.session.calib_rows + self.session.eval_rows)
+        return PHYS.execute(self.physical_plan(), n_probe=n_probe)
 
     def _log_prefix_savings(self, engine, kind: str, hits0: int,
                             saved0: int) -> None:
@@ -332,16 +435,21 @@ class Query:
         ModelPool, private otherwise)."""
         gen = self._ops()
         send = None
+        self.last_run_stats = []
         while True:
             try:
-                qsig, probe, spec = gen.send(send)
+                op = gen.send(send)
             except StopIteration as stop:
                 return stop.value
-            engine = (self.session.optimized_engine(qsig, probe)
-                      if self.optimize else self.session.base_engine())
+            engine = (self.session.optimized_engine(op.qsig, op.probe)
+                      if op.optimize else self.session.base_engine())
             st = getattr(engine, "stats", None)
             hits0 = getattr(st, "prefix_hits", 0) if st else 0
             saved0 = getattr(st, "prefill_tokens_saved", 0) if st else 0
+            spec = op.spec
             send = OPS._invoke(engine, spec.prompts, max_new=spec.max_new,
                                prefix=spec.prefix)
+            self.last_run_stats.append(
+                OpRunStats(kind=spec.kind, qsig=op.qsig,
+                           invocations=len(send)))
             self._log_prefix_savings(engine, spec.kind, hits0, saved0)

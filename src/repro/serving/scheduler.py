@@ -616,22 +616,25 @@ class Scheduler:
         """Drive OLAP query *plans* concurrently: ``queries`` maps
         tenant -> ``Query``; each plan's LLM operators run in order,
         but operators of different tenants interleave tick-by-tick.
+        Each ``Query._ops()`` generator yields optimizer-lowered
+        ``ExecutableOp``s (olap/physical.py) carrying the per-op engine
+        choice (base vs instance-optimized recipe), probe sample,
+        prefix template, and the dedup-wrapped prompt stream.
         Returns tenant -> result Table."""
         gens = {t: q._ops() for t, q in queries.items()}
-        optimize = {t: q.optimize for t, q in queries.items()}
         results: Dict[str, Any] = {}
         current: Dict[str, Submission] = {}
 
         def advance(tenant: str, send_val) -> None:
             try:
-                qsig, probe, spec = gens[tenant].send(send_val)
+                op = gens[tenant].send(send_val)
             except StopIteration as stop:
                 results[tenant] = stop.value
                 return
             current[tenant] = self.submit(
-                tenant, spec.prompts, qsig=qsig, probe=probe,
-                max_new=spec.max_new, prefix=spec.prefix,
-                optimize=optimize[tenant])
+                tenant, op.spec.prompts, qsig=op.qsig, probe=op.probe,
+                max_new=op.spec.max_new, prefix=op.spec.prefix,
+                optimize=op.optimize)
 
         t0 = time.time()
         for tenant in queries:

@@ -139,3 +139,49 @@ class TestModelCache:
         for i in range(100):
             mc.put(f"q{i}", "d", self._m(f"m{i}"))
         assert len(mc) == 8 and mc.evictions == 92
+
+    def test_eviction_follows_recency_order_exactly(self):
+        mc = ModelCache(capacity=3)
+        for tag in ("a", "b", "c"):
+            mc.put(tag, "d", self._m(tag))
+        assert mc.get("a", "d") is not None      # order now b, c, a
+        mc.put("x", "d", self._m("x"))           # evicts b
+        mc.put("y", "d", self._m("y"))           # evicts c
+        assert mc.get("b", "d") is None and mc.get("c", "d") is None
+        assert all(mc.get(t, "d") is not None for t in ("a", "x", "y"))
+
+    def test_capacity_one_keeps_only_latest(self):
+        mc = ModelCache(capacity=1)
+        mc.put("q1", "d", self._m("m1"))
+        assert len(mc) == 1 and mc.evictions == 0
+        mc.put("q2", "d", self._m("m2"))
+        assert len(mc) == 1 and mc.evictions == 1
+        assert mc.get("q1", "d") is None
+        assert mc.get("q2", "d").version == "m2"
+
+    def test_put_existing_key_replaces_without_eviction(self):
+        mc = ModelCache(capacity=2)
+        mc.put("q1", "d", self._m("old"))
+        mc.put("q2", "d", self._m("m2"))
+        mc.put("q1", "d", self._m("new"))        # replace, at capacity
+        assert len(mc) == 2 and mc.evictions == 0
+        assert mc.get("q1", "d").version == "new"
+        mc.put("q3", "d", self._m("m3"))         # now q2 is LRU
+        assert mc.get("q2", "d") is None and mc.evictions == 1
+
+    def test_hit_and_eviction_accounting_on_repeated_get_put(self):
+        mc = ModelCache(capacity=2)
+        assert mc.get("q1", "d") is None         # miss: no hit counted
+        assert mc.hits == 0
+        mc.put("q1", "d", self._m("m1"))
+        for _ in range(3):
+            assert mc.get("q1", "d") is not None
+        assert mc.hits == 3
+        # distinct data signature is a distinct entry, not a hit
+        assert mc.get("q1", "other-dsig") is None
+        assert mc.hits == 3
+        for i in range(4):
+            mc.put(f"q{i + 2}", "d", self._m(f"m{i}"))
+        assert mc.evictions == 3 and len(mc) == 2
+        # evicted entries miss; counters are monotone
+        assert mc.get("q1", "d") is None and mc.hits == 3

@@ -1,0 +1,434 @@
+"""Logical plan IR + rule-based optimizer + physical planner.
+
+Everything here runs against deterministic fake engines — the plan
+pipeline (plan -> optimize -> lower -> execute) is model-agnostic, and
+the byte-identity guarantees it must uphold are exactly checkable with
+a fake whose outputs are a pure function of the prompt.
+"""
+import dataclasses
+
+import pytest
+
+from repro.olap import operators as OPS
+from repro.olap import optimizer as OPT
+from repro.olap import physical as PHYS
+from repro.olap import plan as P
+from repro.olap.query import Query
+from repro.olap.table import Table
+
+
+class FakeEngine:
+    """Output is a pure function of the prompt (like greedy decode)."""
+
+    def __init__(self, fn=None):
+        self.fn = fn or (lambda p: "out(" + p + ")")
+        self.calls = []
+
+    def generate(self, prompts, max_new=8):
+        prompts = list(prompts)
+        self.calls.extend(prompts)
+        return [self.fn(p) for p in prompts]
+
+
+class FakeSession:
+    calib_rows = 4
+    eval_rows = 2
+    pool = None
+
+    def __init__(self, fn=None):
+        self.log = []
+        self.eng = FakeEngine(fn)
+        self.probes = []
+
+    def base_engine(self):
+        return self.eng
+
+    def optimized_engine(self, qsig, probe):
+        self.probes.append((qsig, list(probe)))
+        return self.eng
+
+
+def table():
+    return Table({"category": ["a", "b", "a", "a", "c", "b", "a", "c"],
+                  "status": ["ok", "bad", "ok", "bad", "ok", "ok",
+                             "bad", "ok"]})
+
+
+class TestPlanIR:
+    def test_builder_appends_immutable_nodes(self):
+        q = Query(table(), FakeSession()) \
+            .llm_map("category", prompt="p: ", out_col="label") \
+            .filter(lambda r: True, columns=["status"])
+        nodes = P.chain(q.logical_plan())
+        assert [n.kind for n in nodes] == ["filter", "map", "scan"]
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            nodes[1].col = "other"
+
+    def test_with_child_is_copy_not_mutation(self):
+        scan = P.Scan(table())
+        m = P.LLMMap(input=scan, col="category", prompt="p: ",
+                     out_col="o", max_new=4)
+        f = P.Filter(input=m, pred=lambda r: True)
+        swapped = P.with_child(m, P.with_child(f, scan))
+        assert f.child is m                     # original untouched
+        assert swapped.child.kind == "filter"
+
+    def test_schema_tracking(self):
+        q = Query(table(), FakeSession()) \
+            .llm_map("category", prompt="p: ", out_col="label") \
+            .llm_correct("status")
+        assert P.schema_at(q.logical_plan()) == {
+            "category", "status", "label", "status_fixed"}
+
+    def test_validate_rejects_missing_column(self):
+        q = Query(table(), FakeSession()).llm_map("nope", prompt="p: ")
+        with pytest.raises(ValueError, match="missing column"):
+            P.validate(q.logical_plan())
+
+    def test_qsig_stable_across_fusion(self):
+        scan = P.Scan(table())
+        m = P.LLMMap(input=scan, col="category", prompt="p: ",
+                     out_col="o", max_new=4)
+        fused = P.LLMFused(input=scan, col="category", prompt="p: ",
+                           outs=("o", "o2"), max_new=4, src_kind="map")
+        assert P.qsig(m) == P.qsig(fused)
+        # same for corrects: the fused node keeps its constituents'
+        # signature so fusion never forks the model cache
+        c = P.LLMCorrect(input=scan, col="category", prompt="p: ",
+                         out_col="o", max_new=4)
+        fc = P.LLMFused(input=scan, col="category", prompt="p: ",
+                        outs=("o", "o2"), max_new=4, src_kind="correct")
+        assert P.qsig(c) == P.qsig(fc)
+        assert P.qsig(c) != P.qsig(fused)
+
+
+class TestRules:
+    def _plan(self, q):
+        opt, firings = OPT.optimize(q.logical_plan())
+        return opt, [f.rule for f in firings]
+
+    def test_pushdown_declared_filter_below_map(self):
+        q = Query(table(), FakeSession()) \
+            .llm_map("category", prompt="p: ", out_col="label") \
+            .filter(lambda r: r["status"] == "ok", columns=["status"])
+        opt, rules = self._plan(q)
+        assert "pushdown" in rules
+        kinds = [n.kind for n in P.chain(opt)]
+        assert kinds.index("filter") > kinds.index("map")  # filter deeper
+
+    def test_pushdown_blocked_without_declared_columns(self):
+        q = Query(table(), FakeSession()) \
+            .llm_map("category", prompt="p: ", out_col="label") \
+            .filter(lambda r: r["status"] == "ok")       # opaque pred
+        _, rules = self._plan(q)
+        assert "pushdown" not in rules
+
+    def test_pushdown_blocked_when_pred_reads_llm_output(self):
+        q = Query(table(), FakeSession()) \
+            .llm_map("category", prompt="p: ", out_col="label") \
+            .filter(lambda r: r["label"] == "x", columns=["label"])
+        _, rules = self._plan(q)
+        assert "pushdown" not in rules
+
+    def test_opaque_filter_still_crosses_llm_filter(self):
+        # two filters commute regardless of read sets
+        q = Query(table(), FakeSession()) \
+            .llm_filter("category", prompt="keep? ") \
+            .filter(lambda r: r["status"] == "ok")
+        opt, rules = self._plan(q)
+        assert "pushdown" in rules
+        kinds = [n.kind for n in P.chain(opt)]
+        assert kinds.index("filter") > kinds.index("llm_filter")
+
+    def test_pushdown_never_crosses_join(self):
+        right = Table({"name": ["a", "b"]})
+        q = Query(Table({"name": ["a", "c"], "s": ["x", "y"]}),
+                  FakeSession()) \
+            .llm_join(right, ("name", "name")) \
+            .filter(lambda r: True, columns=["l_s"])
+        _, rules = self._plan(q)
+        assert "pushdown" not in rules
+
+    def test_dedup_fires_on_duplicate_scan_column(self):
+        q = Query(table(), FakeSession()) \
+            .llm_map("category", prompt="p: ", out_col="label")
+        opt, rules = self._plan(q)
+        assert rules == ["dedup"]
+        assert P.chain(opt)[0].dedup
+
+    def test_dedup_skips_all_unique_and_derived_columns(self):
+        t = Table({"v": ["a", "b", "c"]})
+        q1 = Query(t, FakeSession()).llm_map("v", prompt="p: ",
+                                             out_col="o")
+        _, rules = self._plan(q1)
+        assert "dedup" not in rules              # no duplicates
+        q2 = Query(table(), FakeSession()) \
+            .llm_correct("category") \
+            .llm_map("category_fixed", prompt="p: ", out_col="o")
+        opt, _ = self._plan(q2)
+        # the derived-column map has unknown uniqueness: never annotated
+        derived = [n for n in P.chain(opt) if n.kind == "map"]
+        assert derived and not derived[0].dedup
+
+    def test_dedup_skips_shadowed_scan_column(self):
+        # an op below REWRITES 'category' in place: the Scan stats no
+        # longer describe the values the map will read, even though
+        # the name still resolves in the stats table
+        q = Query(table(), FakeSession()) \
+            .llm_correct("category", prompt="fix: ",
+                         out_col="category") \
+            .llm_map("category", prompt="p: ", out_col="o")
+        opt, _ = self._plan(q)
+        maps = [n for n in P.chain(opt) if n.kind == "map"]
+        assert maps and not maps[0].dedup
+        # the correct itself still reads the pristine Scan column
+        corrects = [n for n in P.chain(opt) if n.kind == "correct"]
+        assert corrects and corrects[0].dedup
+
+    def test_fusion_requires_identical_template(self):
+        q = Query(table(), FakeSession()) \
+            .llm_map("category", prompt="p: ", out_col="o1") \
+            .llm_map("category", prompt="p: ", out_col="o2")
+        opt, rules = self._plan(q)
+        assert "fusion" in rules
+        fused = P.chain(opt)[0]
+        assert fused.kind == "fused" and fused.outs == ("o1", "o2")
+        # different templates never fuse
+        q2 = Query(table(), FakeSession()) \
+            .llm_map("category", prompt="p: ", out_col="o1") \
+            .llm_map("category", prompt="q: ", out_col="o2")
+        _, rules2 = self._plan(q2)
+        assert "fusion" not in rules2
+
+    def test_fusion_blocked_when_second_reads_first_output(self):
+        q = Query(table(), FakeSession()) \
+            .llm_map("category", prompt="p: ", out_col="x") \
+            .llm_map("x", prompt="p: ", out_col="y")
+        _, rules = self._plan(q)
+        assert "fusion" not in rules
+
+    def test_fusion_blocked_across_kinds(self):
+        # a fused map+correct would have to pick one kind's qsig and
+        # fork the other's model cache: like-kinded fusion only
+        q = Query(table(), FakeSession()) \
+            .llm_correct("category", prompt="p: ", out_col="x",
+                         max_new=4) \
+            .llm_map("category", prompt="p: ", out_col="y", max_new=4)
+        _, rules = self._plan(q)
+        assert "fusion" not in rules
+
+    def test_correct_correct_fusion_keeps_model_cache_key(self):
+        q = Query(table(), FakeSession()) \
+            .llm_correct("category", prompt="p: ", out_col="x",
+                         max_new=4) \
+            .llm_correct("category", prompt="p: ", out_col="y",
+                         max_new=4)
+        opt, rules = self._plan(q)
+        assert "fusion" in rules
+        fused = P.chain(opt)[0]
+        solo = P.LLMCorrect(input=P.Scan(table()), col="category",
+                            prompt="p: ", out_col="x", max_new=4)
+        assert P.qsig(fused) == P.qsig(solo)
+
+    def test_every_firing_strictly_reduces_cost(self):
+        q = Query(table(), FakeSession()) \
+            .llm_map("category", prompt="p: ", out_col="o1") \
+            .llm_map("category", prompt="p: ", out_col="o2") \
+            .filter(lambda r: r["status"] == "ok", columns=["status"])
+        _, firings = OPT.optimize(q.logical_plan())
+        assert len(firings) >= 3                # pushdown+fusion+dedup
+        for f in firings:
+            assert f.cost_after < f.cost_before
+
+    def test_optimizer_is_deterministic(self):
+        def build():
+            return (Query(table(), FakeSession())
+                    .llm_map("category", prompt="p: ", out_col="o1")
+                    .llm_map("category", prompt="p: ", out_col="o2")
+                    .filter(lambda r: r["status"] == "ok",
+                            columns=["status"]))
+        a, fa = OPT.optimize(build().logical_plan())
+        b, fb = OPT.optimize(build().logical_plan())
+        assert [(f.rule, f.desc, f.cost_before, f.cost_after)
+                for f in fa] == \
+               [(f.rule, f.desc, f.cost_before, f.cost_after)
+                for f in fb]
+        assert P.render(a) == P.render(b)
+
+
+def run_pair(build):
+    """Run the same query with the optimizer on and off; return
+    (table_on, table_off, calls_on, calls_off)."""
+    s_on, s_off = FakeSession(), FakeSession()
+    r_on = build(s_on, optimize_plan=True).run()
+    r_off = build(s_off, optimize_plan=False).run()
+    return r_on, r_off, s_on.eng.calls, s_off.eng.calls
+
+
+class TestByteIdentity:
+    """Optimizer on vs off: byte-identical outputs on plans where
+    every rule (pushdown, dedup, fusion) fires."""
+
+    def test_all_rules_fire_and_outputs_identical(self):
+        def build(sess, **kw):
+            return (Query(table(), sess, optimize=False, **kw)
+                    .llm_map("category", prompt="p: ", out_col="o1",
+                             max_new=4)
+                    .llm_map("category", prompt="p: ", out_col="o2",
+                             max_new=4)
+                    .filter(lambda r: r["status"] == "ok",
+                            columns=["status"]))
+        # precondition: all three rules fire on this plan
+        _, firings = OPT.optimize(build(FakeSession()).logical_plan())
+        assert {f.rule for f in firings} == {"pushdown", "dedup", "fusion"}
+        r_on, r_off, calls_on, calls_off = run_pair(build)
+        assert r_on.columns == r_off.columns          # byte-identical
+        assert len(calls_on) < len(calls_off) / 2     # >2x fewer calls
+
+    def test_llm_filter_pipeline_identical(self):
+        def build(sess, **kw):
+            return (Query(table(), sess, optimize=False, **kw)
+                    .llm_filter("category",
+                                prompt="keep? ",
+                                keep=lambda o: "(keep? a)" in o)
+                    .filter(lambda r: r["status"] != "bad",
+                            columns=["status"]))
+        r_on, r_off, calls_on, calls_off = run_pair(build)
+        assert r_on.columns == r_off.columns
+        assert len(calls_on) < len(calls_off)
+
+    def test_optimized_models_path_identical(self):
+        def build(sess, **kw):
+            return (Query(table(), sess, optimize=True, **kw)
+                    .llm_map("category", prompt="p: ", out_col="o",
+                             max_new=4)
+                    .filter(lambda r: r["status"] == "ok",
+                            columns=["status"]))
+        r_on, r_off, _, _ = run_pair(build)
+        assert r_on.columns == r_off.columns
+
+    def test_join_survives_the_pipeline(self):
+        right = Table({"name": ["alpha", "beta", "Alpha"]})
+
+        def build(sess, **kw):
+            return (Query(Table({"name": ["alpha", "gamma"]}), sess,
+                          optimize=False, **kw)
+                    .llm_join(right, ("name", "name")))
+        s = FakeSession(lambda p: "same"
+                        if len(set(x.strip().lower() for x in
+                                   p.split(":", 1)[1].split("|"))) == 1
+                        else "different")
+        s2 = FakeSession(s.eng.fn)
+        r_on = build(s, optimize_plan=True).run()
+        r_off = build(s2, optimize_plan=False).run()
+        assert r_on.columns == r_off.columns
+        assert len(r_on) == 2
+
+
+class TestPhysicalPlan:
+    def test_annotations(self):
+        sess = FakeSession()
+        q = Query(table(), sess, optimize=True) \
+            .llm_map("category", prompt="p: ", out_col="o") \
+            .filter(lambda r: r["status"] == "ok", columns=["status"])
+        pp = q.physical_plan()
+        [op] = pp.llm_ops
+        assert op.engine == "optimized" and op.placement == "private"
+        assert op.prefix == "p: " and op.dedup
+        assert op.qsig == P.qsig(op.node)
+        # base-engine query flips the annotation
+        q2 = Query(table(), sess, optimize=False).llm_map("category")
+        assert q2.physical_plan().llm_ops[0].engine == "base"
+
+    def test_executor_protocol_counts_and_order(self):
+        sess = FakeSession()
+        q = Query(table(), sess, optimize=False) \
+            .llm_map("category", prompt="p: ", out_col="o", max_new=4) \
+            .filter(lambda r: r["status"] == "ok", columns=["status"])
+        gen = q._ops()
+        op = gen.send(None)
+        prompts = list(op.spec.prompts)
+        # dedup + pushdown applied: unique categories of ok-rows
+        assert prompts == ["p: a", "p: c", "p: b"]
+        with pytest.raises(StopIteration) as stop:
+            gen.send([f"<{p}>" for p in prompts])
+        out = stop.value.value
+        assert out["o"] == ["<p: a>", "<p: a>", "<p: c>", "<p: b>",
+                            "<p: c>"]
+
+    def test_run_stats_report_invocations(self):
+        sess = FakeSession()
+        q = Query(table(), sess, optimize=False) \
+            .llm_map("category", prompt="p: ", out_col="o", max_new=4)
+        q.run()
+        [st] = q.last_run_stats
+        assert st.kind == "map" and st.invocations == 3   # unique values
+
+    def test_select_lowered_inline(self):
+        sess = FakeSession()
+        out = Query(table(), sess, optimize=False) \
+            .llm_map("category", prompt="p: ", out_col="o", max_new=4) \
+            .select(["o"]).run()
+        assert list(out.columns) == ["o"] and len(out) == 8
+
+
+EXPECTED_EXPLAIN = """\
+EXPLAIN (models: base, placement: private, plan optimizer: on)
+
+logical plan:
+  Filter[reads=(status)]
+    LLMMap[category -> label, prompt='label: ']
+      Scan[scan, rows=8, cols=(category, status)]
+
+optimized plan:
+  LLMMap[category -> label, prompt='label: ', dedup]  (rows 4 -> 4, 2 calls x 8 tok = cost 16)
+    Filter[reads=(status)]  (rows 8 -> 4)
+      Scan[scan, rows=8, cols=(category, status)]  (rows 8 -> 8)
+
+rules fired:
+  1. dedup: unique inputs only for LLMMap[category -> label, prompt='label: '] (cost 64 -> 24)
+  2. pushdown: Filter[reads=(status)] below LLMMap[category -> label, prompt='label: ', dedup] (cost 24 -> 16)
+
+physical plan:
+  1. table filter
+  2. llm map qsig=31aef8a83219 engine=base placement=private dedup=on est_calls=2 prefix='label: '
+
+estimated LLM cost: 64 -> 16 prompt-tokens (4.0x)"""
+
+
+class TestExplain:
+    def test_explain_snapshot(self):
+        q = Query(table(), FakeSession(), optimize=False) \
+            .llm_map("category", prompt="label: ", out_col="label",
+                     max_new=4) \
+            .filter(lambda r: r["status"] == "ok", columns=["status"])
+        assert q.explain() == EXPECTED_EXPLAIN
+
+    def test_explain_optimizer_off_shows_no_rules(self):
+        q = Query(table(), FakeSession(), optimize_plan=False) \
+            .llm_map("category", prompt="p: ", out_col="o")
+        text = q.explain()
+        assert "plan optimizer: off" in text
+        assert "(none)" in text
+
+    def test_explain_does_not_execute(self):
+        sess = FakeSession()
+        Query(table(), sess).llm_map("category").explain()
+        assert sess.eng.calls == []
+
+
+class TestDedupSpec:
+    def test_dedup_scatter_preserves_row_order(self):
+        t = Table({"v": ["x", "y", "x", "z", "y"]})
+        spec = OPS.map_spec(t, "v", prompt="p: ", out_col="o",
+                            dedup=True)
+        prompts = list(spec.prompts)
+        assert prompts == ["p: x", "p: y", "p: z"]
+        out = spec.finish(["X", "Y", "Z"])
+        assert out["o"] == ["X", "Y", "X", "Z", "Y"]
+
+    def test_dedup_stringifies_consistently(self):
+        t = Table({"v": [1, "1", 1]})
+        spec = OPS.correct_spec(t, "v", prompt="p: ", dedup=True)
+        assert list(spec.prompts) == ["p: 1"]
+        assert spec.finish(["one"])["v_fixed"] == ["one"] * 3

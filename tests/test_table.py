@@ -1,0 +1,103 @@
+"""Table invariants: ragged-column validation, empty-table edge cases,
+and the columnar filter fast path."""
+import pytest
+
+from repro.olap.table import Table
+
+
+class TestValidation:
+    def test_ragged_columns_rejected(self):
+        with pytest.raises(ValueError, match="ragged columns"):
+            Table({"a": [1, 2, 3], "b": ["x", "y"]})
+
+    def test_error_names_the_lengths(self):
+        with pytest.raises(ValueError, match=r"'a': 2.*'b': 1"):
+            Table({"a": [1, 2], "b": ["x"]})
+
+    def test_equal_lengths_accepted(self):
+        t = Table({"a": [1, 2], "b": ["x", "y"]})
+        assert len(t) == 2
+
+    def test_empty_columns_ok(self):
+        assert len(Table({"a": [], "b": []})) == 0
+        assert len(Table({})) == 0
+
+    def test_with_column_length_mismatch(self):
+        t = Table({"a": [1, 2]})
+        with pytest.raises(ValueError, match="3 values for 2 rows"):
+            t.with_column("b", ["only-one", "x", "y"])
+
+    def test_getitem_unknown_column(self):
+        with pytest.raises(KeyError, match="available"):
+            Table({"a": [1]})["b"]
+
+
+class TestFromRows:
+    def test_empty_rows_give_empty_table(self):
+        t = Table.from_rows([])
+        assert len(t) == 0 and t.columns == {}
+
+    def test_schema_mismatch_rejected(self):
+        rows = [{"a": 1, "b": 2}, {"a": 3}]
+        with pytest.raises(ValueError, match=r"row 1.*missing \['b'\]"):
+            Table.from_rows(rows)
+
+    def test_extra_key_rejected(self):
+        rows = [{"a": 1}, {"a": 2, "b": 3}]
+        with pytest.raises(ValueError, match=r"unexpected \['b'\]"):
+            Table.from_rows(rows)
+
+    def test_roundtrip(self):
+        rows = [{"a": 1, "b": "x"}, {"a": 2, "b": "y"}]
+        assert Table.from_rows(rows).rows() == rows
+
+
+class TestSelect:
+    def test_unknown_column_rejected(self):
+        with pytest.raises(KeyError, match=r"\['z'\]"):
+            Table({"a": [1]}).select(["a", "z"])
+
+    def test_empty_selection_rejected(self):
+        with pytest.raises(ValueError, match="at least one column"):
+            Table({"a": [1]}).select([])
+
+    def test_select_keeps_order_and_rows(self):
+        t = Table({"a": [1, 2], "b": ["x", "y"], "c": [True, False]})
+        s = t.select(["c", "a"])
+        assert list(s.columns) == ["c", "a"] and len(s) == 2
+
+
+class TestFilter:
+    def t(self):
+        return Table({"a": list(range(10)),
+                      "b": [f"s{i % 3}" for i in range(10)]})
+
+    def test_semantics_match_row_loop(self):
+        t = self.t()
+        for pred in (lambda r: r["a"] % 2 == 0,
+                     lambda r: r["b"] == "s1" and r["a"] > 3,
+                     lambda r: set(r) == {"a", "b"},       # key iteration
+                     lambda r: len(r.items()) == 2,        # dict protocol
+                     lambda r: False,
+                     lambda r: True):
+            want = [t.row(i) for i in range(len(t)) if pred(t.row(i))]
+            assert t.filter(pred).rows() == want
+
+    def test_pred_receives_real_dict(self):
+        # the fast path must not change the pred-facing type
+        seen = []
+        self.t().filter(lambda r: seen.append(type(r)) or True)
+        assert set(seen) == {dict}
+
+    def test_row_order_preserved(self):
+        t = self.t()
+        assert t.filter(lambda r: r["a"] % 2 == 1)["a"] == [1, 3, 5, 7, 9]
+
+    def test_zero_column_and_empty_tables(self):
+        assert len(Table({}).filter(lambda r: True)) == 0
+        assert Table({"a": []}).filter(lambda r: True).columns == {"a": []}
+
+    def test_take_subsets_rows_in_given_order(self):
+        t = self.t()
+        s = t.take([3, 0, 3])
+        assert s["a"] == [3, 0, 3] and s["b"] == ["s0", "s0", "s0"]

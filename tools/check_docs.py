@@ -27,6 +27,7 @@ DOCS = [
     "src/repro/serving/README.md",
     "src/repro/core/README.md",
     "src/repro/distributed/README.md",
+    "src/repro/olap/README.md",
 ]
 
 PREFIXES = ("", "src/", "src/repro/")
