@@ -1,0 +1,18 @@
+"""Static-analysis subsystem: unified diagnostics + the two analyzers.
+
+Layer 1, the plan verifier, lives in ``repro.olap.analysis`` (it is
+IR-coupled); layer 2, the jitted hot-path auditor, in
+``repro.analysis.jit_audit``.  Both emit ``Diagnostic``s through this
+package's framework; ``tools/analyze.py`` is the CLI entry point.
+"""
+from repro.analysis.diagnostics import (  # noqa: F401
+    CODES,
+    Baseline,
+    Diagnostic,
+    load_baseline,
+    render_json,
+    render_text,
+    save_baseline,
+    sort_diagnostics,
+    summarize,
+)

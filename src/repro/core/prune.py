@@ -392,9 +392,9 @@ def drop_layers(params, cfg, stats: CalibStats, n_drop_units: int):
                 if k.startswith(pre_old):
                     moved[pre_new + k[len(pre_old):]] = new_stats.pop(k)
         for k in list(new_stats):
-            if k.startswith("blocks.0.") and k not in moved:
-                if int(k.split(".")[2]) >= keep_n:
-                    new_stats.pop(k)
+            if (k.startswith("blocks.0.") and k not in moved
+                    and int(k.split(".")[2]) >= keep_n):
+                new_stats.pop(k)
         new_stats.update(moved)
         new_cfg = cfg.replace(n_layers=keep_n)
     elif fam == "hybrid":
@@ -417,9 +417,9 @@ def drop_layers(params, cfg, stats: CalibStats, n_drop_units: int):
                 if k.startswith(pre_old):
                     moved[pre_new + k[len(pre_old):]] = new_stats.pop(k)
         for k in list(new_stats):
-            if k.startswith("mamba_groups.") and k not in moved:
-                if int(k.split(".")[1]) >= keep_n:
-                    new_stats.pop(k)
+            if (k.startswith("mamba_groups.") and k not in moved
+                    and int(k.split(".")[1]) >= keep_n):
+                new_stats.pop(k)
         new_stats.update(moved)
         new_cfg = cfg.replace(n_layers=keep_n * (K + 1) + tail)
     elif fam == "encdec":
@@ -433,7 +433,7 @@ def drop_layers(params, cfg, stats: CalibStats, n_drop_units: int):
                            "dec_blocks", i))
         scores.sort()
         drop_set = {"enc_blocks": set(), "dec_blocks": set()}
-        for s, lst, i in scores:
+        for _score, lst, i in scores:
             if len(drop_set["enc_blocks"]) + len(drop_set["dec_blocks"]) \
                     >= n_drop_units:
                 break
@@ -450,9 +450,9 @@ def drop_layers(params, cfg, stats: CalibStats, n_drop_units: int):
                     if k.startswith(pre_old):
                         moved[pre_new + k[len(pre_old):]] = new_stats.pop(k)
             for k in list(new_stats):
-                if k.startswith(f"{lst}.") and k not in moved:
-                    if int(k.split(".")[1]) >= len(kept):
-                        new_stats.pop(k)
+                if (k.startswith(f"{lst}.") and k not in moved
+                        and int(k.split(".")[1]) >= len(kept)):
+                    new_stats.pop(k)
             new_stats.update(moved)
         new_cfg = cfg.replace(
             n_enc_layers=cfg.n_enc_layers - len(drop_set["enc_blocks"]),

@@ -14,8 +14,7 @@ def quant_matmul(x, q, scale, *, group: int, in_scale=None):
     w = w.reshape(K, N)
     if in_scale is not None:
         x = x.astype(jnp.float32) * in_scale
-    y = jnp.einsum("...i,io->...o", x.astype(jnp.float32), w)
-    return y
+    return jnp.einsum("...i,io->...o", x.astype(jnp.float32), w)
 
 
 def block_sparse_matmul(x, w, mask, *, bs: int):

@@ -20,6 +20,7 @@ collective-permute result shapes).  Hardware constants: TPU v5e.
 """
 from __future__ import annotations
 
+import math
 import re
 from dataclasses import dataclass, field
 from typing import Dict, Optional
@@ -35,18 +36,25 @@ _DTYPE_BYTES = {
     "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
 }
 
+# result shape may be a tuple, including one-level-nested tuples as
+# emitted for async pairs: `(bf16[8], (bf16[8], u32[]))` — the inner
+# alternative admits one nesting depth
 _COLL_RE = re.compile(
     r"^\s*(?:%?[\w.\-]+\s*=\s*)?"
-    r"((?:\([^)]*\)|\S+))\s+"
+    r"((?:\((?:[^()]|\([^()]*\))*\)|\S+))\s+"
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start|-done)?\(",
+    r"(-start|-done)?\(",
     re.M)
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
 def _shape_bytes(shape_str: str) -> float:
-    """bytes of 'bf16[128,1024]{1,0}' or tuple '(f32[2,4], u32[])'."""
+    """bytes of 'bf16[128,1024]{1,0}' or tuple '(f32[2,4], u32[])'.
+
+    Sub-byte dtypes (s4/u4) are packed two-per-byte but a shape's
+    buffer is still whole bytes — ceil per array, so 'u4[3]' is 2
+    bytes, not 1.5."""
     total = 0.0
     for m in _SHAPE_RE.finditer(shape_str):
         dt, dims = m.group(1), m.group(2)
@@ -56,17 +64,21 @@ def _shape_bytes(shape_str: str) -> float:
         if dims:
             for d in dims.split(","):
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
+        total += math.ceil(n * _DTYPE_BYTES[dt])
     return total
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, float]:
-    """Sum of result-shape bytes per collective kind (the '-done' result
-    shape equals the transferred payload for these ops)."""
+    """Sum of result-shape bytes per collective kind.
+
+    Async collectives appear as a '-start'/'-done' pair whose result
+    shapes both carry the payload; only the '-done' (or a synchronous
+    op with no suffix) is counted, so a pair contributes once."""
     out: Dict[str, float] = {}
-    seen_done = set()
     for m in _COLL_RE.finditer(hlo_text):
-        shape_str, kind = m.group(1), m.group(2)
+        shape_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-start":
+            continue
         out[kind] = out.get(kind, 0.0) + _shape_bytes(shape_str)
     return out
 

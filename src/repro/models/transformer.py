@@ -36,9 +36,9 @@ def pattern_unit(cfg) -> Tuple[str, int, int]:
         if R < 1:
             continue
         unit = pat[:U]
-        if unit * R == pat[:U * R] and pat[U * R:] == unit[:n - U * R]:
-            if R >= 2 or U == n:
-                return unit, R, n - U * R
+        if (unit * R == pat[:U * R] and pat[U * R:] == unit[:n - U * R]
+                and (R >= 2 or U == n)):
+            return unit, R, n - U * R
     return pat, 1, 0
 
 

@@ -36,6 +36,16 @@ cheapest strictly-improving candidate (ties break on rule priority,
 then textual description — fully deterministic).  Costs are integers
 and every firing strictly decreases total cost, so the loop
 terminates.
+
+Every applied rewrite is additionally re-proved by the independent
+plan verifier (olap/analysis.py): ``optimize`` hands the before/after
+plans to ``verify_rewrite``, which derives the rule's legality
+conditions from the evidence rather than trusting the guard that
+fired.  A failed obligation raises ``PlanVerificationError`` with
+structured diagnostics (stable ``PLAN0xx`` codes) — a buggy rule can
+never silently ship a semantics-changing plan.  ``RuleFiring.verified``
+records the proof and surfaces as a per-rule badge in
+``Query.explain()``.
 """
 from __future__ import annotations
 
@@ -43,6 +53,7 @@ import math
 from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Tuple
 
+from repro.olap import analysis as ANA
 from repro.olap import plan as P
 
 # Deterministic planning knobs: a non-LLM filter and a semantic filter
@@ -76,6 +87,9 @@ class RuleFiring:
     desc: str
     cost_before: int
     cost_after: int
+    # True when the independent verifier re-proved this rewrite's
+    # legality from the before/after plans (olap/analysis.py)
+    verified: bool = False
 
 
 def column_stats(table) -> Dict[str, ColStats]:
@@ -157,9 +171,9 @@ def _rule_pushdown(plan: P.PlanNode) -> List[Tuple[str, P.PlanNode]]:
         if below.kind == "join":
             continue            # join rewrites row identity: never cross
         adds = P.added_cols(below)
-        if adds:
-            if node.columns is None or (set(node.columns) & set(adds)):
-                continue        # pred might (or does) read the op's output
+        if adds and (node.columns is None
+                     or (set(node.columns) & set(adds))):
+            continue            # pred might (or does) read the op's output
         swapped = P.with_child(below,
                                P.with_child(node, below.child))
         out.append((f"{P.describe(node)} below {P.describe(below)}",
@@ -239,7 +253,8 @@ RULES = (
 
 
 def optimize(plan: P.PlanNode,
-             stats: Optional[Dict[str, ColStats]] = None
+             stats: Optional[Dict[str, ColStats]] = None,
+             *, verify: bool = True
              ) -> Tuple[P.PlanNode, List[RuleFiring]]:
     """Cost-driven greedy rewriting to a fixpoint.
 
@@ -248,6 +263,13 @@ def optimize(plan: P.PlanNode,
     that do not strictly improve are discarded, so the (integer) cost
     strictly decreases and the loop terminates.  Deterministic: ties
     break on rule priority order, then description.
+
+    With ``verify`` on (the default, and what every production caller
+    uses) each applied rewrite is independently re-proved by
+    ``analysis.verify_rewrite`` before it replaces the plan; a failed
+    proof obligation raises ``PlanVerificationError``.  ``verify=False``
+    exists only so the verifier's own tests can feed it known-illegal
+    rewrites.
     """
     if stats is None:
         stats = column_stats(P.scan_of(plan).table)
@@ -265,5 +287,11 @@ def optimize(plan: P.PlanNode,
                     best = (key, name, desc, cand, c)
         if best is None:
             return plan, firings
-        _, name, desc, plan, c = best
-        firings.append(RuleFiring(name, desc, cur, c))
+        _, name, desc, cand, c = best
+        if verify:
+            diags = [d for d in ANA.verify_rewrite(plan, cand, name)
+                     if d.severity == "error"]
+            if diags:
+                raise ANA.PlanVerificationError(diags)
+        plan = cand
+        firings.append(RuleFiring(name, desc, cur, c, verified=verify))

@@ -29,6 +29,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Union
 
+from repro.olap import analysis as ANA
 from repro.olap import operators as OPS
 from repro.olap import optimizer as OPT
 from repro.olap import plan as P
@@ -83,15 +84,35 @@ class ExecutableOp:
 
 
 def lower(logical: P.PlanNode, *, optimize_models: bool = True,
-          pooled: bool = False, use_optimizer: bool = True) -> PhysicalPlan:
-    """plan -> optimize -> physical steps."""
+          pooled: bool = False, use_optimizer: bool = True,
+          verify: bool = True) -> PhysicalPlan:
+    """plan -> verify -> optimize (each rewrite re-proved) -> verify ->
+    physical steps.
+
+    The two verifier passes are the execution-time firewall: a
+    hand-mutated plan carrying an illegal optimizer annotation (a
+    dedup over a derived column, a fused node whose constituents were
+    data-dependent, ...) raises ``PlanVerificationError`` with stable
+    ``PLAN0xx`` diagnostics *here*, instead of producing wrong rows
+    from an engine later.
+    """
     P.validate(logical)
+    if verify:
+        pre = [d for d in ANA.verify_plan(logical)
+               if d.severity == "error"]
+        if pre:
+            raise ANA.PlanVerificationError(pre)
     stats = OPT.column_stats(P.scan_of(logical).table)
     logical_cost = OPT.total_cost(logical, stats)
     if use_optimizer:
-        optimized, firings = OPT.optimize(logical, stats)
+        optimized, firings = OPT.optimize(logical, stats, verify=verify)
     else:
         optimized, firings = logical, []
+    if verify:
+        post = [d for d in ANA.verify_plan(optimized)
+                if d.severity == "error"]
+        if post:
+            raise ANA.PlanVerificationError(post)
     est = OPT.estimate(optimized, stats)
     engine = "optimized" if optimize_models else "base"
     placement = "pool" if pooled else "private"

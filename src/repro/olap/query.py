@@ -356,12 +356,16 @@ class Query:
                         f"= cost {e.cost})")
             return f"(rows {e.rows_in} -> {e.rows_out})"
 
+        # the cost unit is part of the EXPLAIN header so readers (and
+        # the snapshot test) can never mistake the raw ints for row
+        # counts or milliseconds
         lines = [
             f"EXPLAIN (models: {'optimized' if self.optimize else 'base'}, "
             f"placement: "
             f"{'pool' if self.session.pool is not None else 'private'}, "
             f"plan optimizer: "
-            f"{'on' if self.optimize_plan else 'off'})",
+            f"{'on' if self.optimize_plan else 'off'}, "
+            f"cost unit: rows x prompt_tokens)",
             "",
             "logical plan:",
             indent(PLAN.render(pplan.logical), "  "),
@@ -372,8 +376,13 @@ class Query:
             "rules fired:",
         ]
         if pplan.firings:
+            # ``[verified]`` = the independent plan verifier re-proved
+            # this rewrite's legality (olap/analysis.py), not just the
+            # rule's own guard
             lines += [f"  {i}. {f.rule}: {f.desc} "
-                      f"(cost {f.cost_before} -> {f.cost_after})"
+                      f"(cost {f.cost_before} -> {f.cost_after} "
+                      f"rows x prompt_tokens)"
+                      + (" [verified]" if f.verified else "")
                       for i, f in enumerate(pplan.firings, 1)]
         else:
             lines.append("  (none)")

@@ -490,6 +490,20 @@ class Engine:
             finished.extend(self.step())
         return finished
 
+    # -- introspection --------------------------------------------------
+    def jit_targets(self) -> Dict[str, object]:
+        """Every jitted callable on the tick hot path, by stable name —
+        the surface the static auditor (analysis/jit_audit.py) wraps
+        and the jit-cache accounting in tests keys on.  Bucket-laddered
+        targets are suffixed ``[bucket]``."""
+        out: Dict[str, object] = {"_insert": self._insert,
+                                  "_decode": self._decode}
+        for b, fn in self._prefill.items():
+            out[f"_prefill[{b}]"] = fn
+        for b, fn in self._prefill_from.items():
+            out[f"_prefill_from[{b}]"] = fn
+        return out
+
     # -- prefix sharing -------------------------------------------------
     def _build_prefix_entry(self, key, prefix_ids):
         """One-time prefill of a template prefix (batch=1, absolute

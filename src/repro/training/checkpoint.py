@@ -153,7 +153,7 @@ def restore(ckpt_dir: str, target, *, step: Optional[int] = None,
 
     flat_t, treedef = _flatten(target)
     leaves = []
-    for i, (path, tgt) in enumerate(flat_t):
+    for i, (_path, _tgt) in enumerate(flat_t):
         name = f"a{i}"
         meta = manifest["arrays"][name]
         if meta["kind"] == "qtensor":

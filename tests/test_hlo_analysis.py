@@ -1,0 +1,76 @@
+"""Unit tests for launch/hlo_analysis.py shape/collective parsing.
+
+These pin the dtype-table edge cases (sub-byte packing rounds UP to
+whole bytes, nested tuple shapes parse fully) and the async-pair
+accounting ('-start'/'-done' count once, not twice).
+"""
+from repro.launch import hlo_analysis as H
+
+
+class TestShapeBytes:
+    def test_simple_array(self):
+        assert H._shape_bytes("bf16[128,1024]{1,0}") == 128 * 1024 * 2
+
+    def test_scalar_and_empty_dims(self):
+        assert H._shape_bytes("f32[]") == 4
+        assert H._shape_bytes("pred[]") == 1
+
+    def test_tuple(self):
+        assert H._shape_bytes("(f32[2,4], u32[])") == 2 * 4 * 4 + 4
+
+    def test_nested_tuple(self):
+        got = H._shape_bytes("(bf16[8], (bf16[8], u32[]))")
+        assert got == 16 + 16 + 4
+
+    def test_sub_byte_dtypes_round_up_per_array(self):
+        # u4[3] packs 2 values/byte but buffers are whole bytes: 2, not 1.5
+        assert H._shape_bytes("u4[3]") == 2
+        assert H._shape_bytes("s4[8]") == 4
+        # two sub-byte arrays round independently
+        assert H._shape_bytes("(u4[3], u4[3])") == 4
+
+    def test_unknown_dtype_ignored(self):
+        assert H._shape_bytes("token[]") == 0
+
+    def test_layout_annotation_not_misparsed(self):
+        # the {1,0} layout suffix must not read as another shape
+        assert H._shape_bytes("f32[4,4]{1,0}") == 64
+
+
+class TestCollectiveBytes:
+    def test_sync_op_counted_once(self):
+        hlo = "  %ag = bf16[64,128] all-gather(bf16[8,128] %x), dims={0}\n"
+        got = H.collective_bytes(hlo)
+        assert got == {"all-gather": 64 * 128 * 2}
+
+    def test_async_pair_counted_once(self):
+        # the -start result repeats the payload inside a tuple; only
+        # the -done result may contribute
+        hlo = (
+            "  %s = (bf16[8,128], bf16[64,128]) all-gather-start("
+            "bf16[8,128] %x), dims={0}\n"
+            "  %d = bf16[64,128] all-gather-done("
+            "(bf16[8,128], bf16[64,128]) %s)\n")
+        got = H.collective_bytes(hlo)
+        assert got == {"all-gather": 64 * 128 * 2}
+
+    def test_kinds_accumulate_independently(self):
+        hlo = (
+            "  %a = f32[16] all-reduce(f32[16] %x), to_apply=%sum\n"
+            "  %b = f32[16] all-reduce(f32[16] %y), to_apply=%sum\n"
+            "  %c = f32[4] reduce-scatter(f32[16] %z), dims={0}\n")
+        got = H.collective_bytes(hlo)
+        assert got == {"all-reduce": 128.0, "reduce-scatter": 16.0}
+
+    def test_non_collective_lines_ignored(self):
+        hlo = ("  %m = f32[128,128] dot(f32[128,128] %a, "
+               "f32[128,128] %b)\n")
+        assert H.collective_bytes(hlo) == {}
+
+    def test_nested_tuple_result(self):
+        hlo = ("  %s = (f32[8], (f32[8], u32[])) "
+               "collective-permute-start(f32[8] %x)\n"
+               "  %d = f32[8] collective-permute-done("
+               "(f32[8], (f32[8], u32[])) %s)\n")
+        got = H.collective_bytes(hlo)
+        assert got == {"collective-permute": 32.0}

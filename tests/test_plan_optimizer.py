@@ -373,7 +373,7 @@ class TestPhysicalPlan:
 
 
 EXPECTED_EXPLAIN = """\
-EXPLAIN (models: base, placement: private, plan optimizer: on)
+EXPLAIN (models: base, placement: private, plan optimizer: on, cost unit: rows x prompt_tokens)
 
 logical plan:
   Filter[reads=(status)]
@@ -386,8 +386,8 @@ optimized plan:
       Scan[scan, rows=8, cols=(category, status)]  (rows 8 -> 8)
 
 rules fired:
-  1. dedup: unique inputs only for LLMMap[category -> label, prompt='label: '] (cost 64 -> 24)
-  2. pushdown: Filter[reads=(status)] below LLMMap[category -> label, prompt='label: ', dedup] (cost 24 -> 16)
+  1. dedup: unique inputs only for LLMMap[category -> label, prompt='label: '] (cost 64 -> 24 rows x prompt_tokens) [verified]
+  2. pushdown: Filter[reads=(status)] below LLMMap[category -> label, prompt='label: ', dedup] (cost 24 -> 16 rows x prompt_tokens) [verified]
 
 physical plan:
   1. table filter
@@ -403,6 +403,23 @@ class TestExplain:
                      max_new=4) \
             .filter(lambda r: r["status"] == "ok", columns=["status"])
         assert q.explain() == EXPECTED_EXPLAIN
+
+    def test_explain_header_names_the_cost_unit(self):
+        # the unit label is load-bearing: raw ints in EXPLAIN were
+        # mistaken for row counts before it existed.  Assert the header
+        # verbatim so the format cannot silently drift.
+        q = Query(table(), FakeSession(), optimize=False) \
+            .llm_map("category", prompt="label: ", out_col="label")
+        header = q.explain().splitlines()[0]
+        assert header == ("EXPLAIN (models: base, placement: private, "
+                          "plan optimizer: on, "
+                          "cost unit: rows x prompt_tokens)")
+
+    def test_explain_marks_verified_rules(self):
+        q = Query(table(), FakeSession(), optimize=False) \
+            .llm_map("category", prompt="p: ", out_col="o", max_new=4)
+        text = q.explain()
+        assert "dedup" in text and "[verified]" in text
 
     def test_explain_optimizer_off_shows_no_rules(self):
         q = Query(table(), FakeSession(), optimize_plan=False) \

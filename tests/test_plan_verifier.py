@@ -1,0 +1,262 @@
+"""Static plan verifier + diagnostics framework.
+
+The verifier (olap/analysis.py) must re-prove every rewrite the
+optimizer ships (zero diagnostics on real workloads) AND reject seeded
+illegal rewrites with stable codes — the second half is a mutation
+test of the first: a verifier that accepts everything would pass the
+positive tests trivially.
+"""
+import dataclasses
+
+import pytest
+
+from repro.analysis import diagnostics as D
+from repro.olap import analysis as ANA
+from repro.olap import optimizer as OPT
+from repro.olap import physical as PHYS
+from repro.olap import plan as P
+from repro.olap.table import Table
+
+
+def table():
+    return Table({"category": ["a", "b", "a", "a", "c", "b", "a", "c"],
+                  "status": ["ok", "bad", "ok", "bad", "ok", "ok",
+                             "bad", "ok"]})
+
+
+def unique_table():
+    return Table({"category": [f"u{i}" for i in range(8)]})
+
+
+def llm_map(inp, *, prompt="label: ", out="label", col="category",
+            new=8, dedup=False):
+    return P.LLMMap(input=inp, col=col, prompt=prompt, out_col=out,
+                    max_new=new, dedup=dedup)
+
+
+def codes(diags):
+    return sorted(d.code for d in diags)
+
+
+# ---------------------------------------------------------------------------
+# positive: every optimizer output proves clean
+# ---------------------------------------------------------------------------
+
+class TestVerifierAcceptsOptimizer:
+    def _workloads(self):
+        t, scan = table(), P.Scan(table())
+        return {
+            "pushdown": P.Filter(input=llm_map(P.Scan(t)),
+                                 pred=lambda r: r["status"] == "ok",
+                                 columns=frozenset({"status"})),
+            "fusion": llm_map(llm_map(scan), out="label2"),
+            "dedup": llm_map(P.Scan(t)),
+            "mixed": P.Filter(
+                input=P.LLMFilter(input=llm_map(P.Scan(t)), col="status",
+                                  prompt="keep? ", max_new=2),
+                pred=lambda r: r["status"] == "ok",
+                columns=frozenset({"status"})),
+        }
+
+    @pytest.mark.parametrize("name", ["pushdown", "fusion", "dedup",
+                                      "mixed"])
+    def test_zero_diagnostics_on_real_workloads(self, name):
+        plan = self._workloads()[name]
+        assert ANA.verify_plan(plan) == []
+        optimized, firings = OPT.optimize(plan, verify=True)
+        assert firings, f"workload {name!r} should fire at least one rule"
+        assert all(f.verified for f in firings)
+        assert ANA.verify_plan(optimized) == []
+
+    def test_lower_runs_both_verify_passes(self):
+        plan = self._workloads()["pushdown"]
+        pplan = PHYS.lower(plan)
+        assert all(f.verified for f in pplan.firings)
+
+    def test_every_rewrite_reproved_per_firing(self):
+        """Each intermediate rewrite is individually proved — not just
+        the final plan — by replaying the firing sequence."""
+        plan = self._workloads()["mixed"]
+        optimized, firings = OPT.optimize(plan, verify=True)
+        assert len(firings) >= 2   # multi-step: dedup + pushdown at least
+
+
+# ---------------------------------------------------------------------------
+# negative: seeded illegal rewrites are rejected with stable codes
+# ---------------------------------------------------------------------------
+
+class TestVerifierRejectsIllegalRewrites:
+    def test_pushdown_past_consumed_column_PLAN012(self):
+        scan = P.Scan(table())
+        m = llm_map(scan)                       # writes "label"
+        filt = P.Filter(input=m, pred=lambda r: r["label"] == "x",
+                        columns=frozenset({"label"}))   # reads it!
+        illegal = P.with_child(m, P.with_child(filt, scan))
+        diags = ANA.verify_rewrite(filt, illegal, "pushdown")
+        assert "PLAN012" in codes(diags)
+        # below the map the filter's read set no longer resolves
+        assert "PLAN004" in codes(diags)
+
+    def test_pushdown_across_join_PLAN011(self):
+        scan = P.Scan(table())
+        join = P.LLMJoin(input=scan, right=Table({"name": ["a", "b"]}),
+                         on=("category", "name"), prompt="match? ",
+                         max_new=2)
+        filt = P.Filter(input=join, pred=lambda r: True,
+                        columns=frozenset({"l_status"}))
+        illegal = P.with_child(join, P.with_child(
+            dataclasses.replace(filt, columns=frozenset({"status"})),
+            scan))
+        diags = ANA.verify_rewrite(filt, illegal, "pushdown")
+        # the filter's columns changed, so the window is not a pure
+        # swap — shape violation is the loud failure here
+        assert set(codes(diags)) & {"PLAN010", "PLAN011"}
+
+    def test_opaque_filter_pushdown_PLAN013(self):
+        scan = P.Scan(table())
+        m = llm_map(scan)
+        filt = P.Filter(input=m, pred=lambda r: True, columns=None)
+        illegal = P.with_child(m, P.with_child(filt, scan))
+        diags = ANA.verify_rewrite(filt, illegal, "pushdown")
+        assert "PLAN013" in codes(diags)
+
+    def test_fusion_across_differing_templates_PLAN031(self):
+        scan = P.Scan(table())
+        lower = llm_map(scan, prompt="a: ", out="l1")
+        upper = llm_map(lower, prompt="b: ", out="l2")
+        fused = P.LLMFused(input=scan, col="category", prompt="b: ",
+                           outs=("l1", "l2"), max_new=8, src_kind="map")
+        diags = ANA.verify_rewrite(upper, fused, "fusion")
+        assert "PLAN031" in codes(diags)
+
+    def test_fusion_across_data_dependency_PLAN033(self):
+        scan = P.Scan(table())
+        lower = llm_map(scan, prompt="p: ", out="label")
+        upper = llm_map(lower, prompt="p: ", col="label", out="l2")
+        fused = P.LLMFused(input=scan, col="label", prompt="p: ",
+                           outs=("label", "l2"), max_new=8,
+                           src_kind="map")
+        diags = ANA.verify_rewrite(upper, fused, "fusion")
+        assert "PLAN033" in codes(diags)
+
+    def test_fusion_wrong_outs_order_PLAN032(self):
+        scan = P.Scan(table())
+        lower = llm_map(scan, out="l1")
+        upper = llm_map(lower, out="l2")
+        fused = P.LLMFused(input=scan, col="category", prompt="label: ",
+                           outs=("l2", "l1"),    # reversed!
+                           max_new=8, src_kind="map")
+        diags = ANA.verify_rewrite(upper, fused, "fusion")
+        assert "PLAN032" in codes(diags)
+
+    def test_dedup_without_duplicates_PLAN022(self):
+        before = llm_map(P.Scan(unique_table()))
+        after = dataclasses.replace(before, dedup=True)
+        diags = ANA.verify_rewrite(before, after, "dedup")
+        assert "PLAN022" in codes(diags)
+
+    def test_dedup_on_derived_column_PLAN021(self):
+        scan = P.Scan(table())
+        lower = llm_map(scan, out="label")
+        upper = llm_map(lower, col="label", out="l2")
+        annotated = P.with_child(
+            dataclasses.replace(upper, dedup=True), lower)
+        diags = ANA.verify_rewrite(upper, annotated, "dedup")
+        assert "PLAN021" in codes(diags)
+
+    def test_dedup_window_smuggling_PLAN020(self):
+        """A 'dedup' rewrite that also changes the prompt is rejected:
+        the window differs by more than the annotation."""
+        before = llm_map(P.Scan(table()))
+        after = dataclasses.replace(before, dedup=True, prompt="other: ")
+        diags = ANA.verify_rewrite(before, after, "dedup")
+        assert "PLAN020" in codes(diags)
+
+    def test_unknown_rule_PLAN099(self):
+        plan = llm_map(P.Scan(table()))
+        diags = ANA.verify_rewrite(plan, plan, "hoist")
+        assert "PLAN099" in codes(diags)
+
+    def test_schema_change_PLAN001(self):
+        scan = P.Scan(table())
+        before = llm_map(scan)
+        diags = ANA.verify_rewrite(before, scan, "pushdown")
+        assert "PLAN001" in codes(diags)
+
+
+class TestVerifierWiring:
+    def test_buggy_rule_raises_at_optimize_time(self, monkeypatch):
+        """A rule whose rewrite is illegal can never ship a plan: the
+        always-on verify mode raises with the structured proof."""
+        def bogus(plan, stats):
+            # claims to be dedup but swaps the prompt too
+            nodes = P.chain(plan)
+            bad = dataclasses.replace(nodes[0], dedup=True, prompt="!!")
+            return [("bogus", P.rebuild([bad] + nodes[1:]))]
+        monkeypatch.setattr(OPT, "RULES", (("dedup", bogus),))
+        with pytest.raises(ANA.PlanVerificationError) as ei:
+            OPT.optimize(llm_map(P.Scan(table())), verify=True)
+        assert any(d.code in ("PLAN020", "PLAN001")
+                   for d in ei.value.diagnostics)
+
+    def test_lower_rejects_hand_mutated_plan(self):
+        """A hand-annotated illegal plan is stopped by the pre-verify
+        pass in physical.lower, before any engine runs."""
+        illegal = llm_map(P.Scan(unique_table()), dedup=True)
+        with pytest.raises(ANA.PlanVerificationError) as ei:
+            PHYS.lower(illegal, use_optimizer=False)
+        assert any(d.code == "PLAN022" for d in ei.value.diagnostics)
+
+    def test_verify_off_lets_illegal_plan_through(self):
+        """verify=False exists for the verifier's own tests; it must
+        actually bypass the check."""
+        illegal = llm_map(P.Scan(unique_table()), dedup=True)
+        pplan = PHYS.lower(illegal, use_optimizer=False, verify=False)
+        assert pplan.llm_ops[0].dedup
+
+
+# ---------------------------------------------------------------------------
+# diagnostics framework
+# ---------------------------------------------------------------------------
+
+class TestDiagnostics:
+    def test_unknown_code_rejected(self):
+        with pytest.raises(ValueError, match="unknown diagnostic code"):
+            D.Diagnostic("PLAN999", "m", "loc")
+
+    def test_bad_severity_rejected(self):
+        with pytest.raises(ValueError, match="severity"):
+            D.Diagnostic("PLAN001", "m", "loc", severity="fatal")
+
+    def test_fingerprint_stable_and_content_addressed(self):
+        a = D.Diagnostic("PLAN001", "m", "loc")
+        b = D.Diagnostic("PLAN001", "m", "loc", hint="different hint")
+        c = D.Diagnostic("PLAN001", "m", "other")
+        assert a.fingerprint() == b.fingerprint()   # hint not hashed
+        assert a.fingerprint() != c.fingerprint()
+
+    def test_render_text_lists_code_and_hint(self):
+        txt = D.render_text([D.Diagnostic("PLAN022", "no dups",
+                                          "optimizer.dedup", hint="drop")])
+        assert "PLAN022" in txt and "hint: drop" in txt
+        assert "1 error(s)" in txt
+
+    def test_baseline_gates_only_new_findings(self, tmp_path):
+        old = D.Diagnostic("PLAN022", "old", "a")
+        new = D.Diagnostic("PLAN022", "new", "b")
+        info = D.Diagnostic("JIT004", "weak", "c", severity="info")
+        path = str(tmp_path / "base.json")
+        D.save_baseline(path, [old])
+        base = D.load_baseline(path)
+        assert base.is_known(old) and not base.is_known(new)
+        assert base.new_findings([old, new, info]) == [new]
+
+    def test_baseline_code_suppression(self, tmp_path):
+        path = str(tmp_path / "base.json")
+        D.save_baseline(path, [], suppress_codes=["JIT008"],
+                        suppress_reasons={"JIT008": "cpu cost model"})
+        base = D.load_baseline(path)
+        d = D.Diagnostic("JIT008", "anything", "anywhere",
+                         severity="warning")
+        assert base.is_known(d)
+        assert base.new_findings([d]) == []

@@ -1,0 +1,121 @@
+"""Property tests (hypothesis): the verifier vs random plan chains.
+
+Positive direction: every optimizer output over ANY well-formed chain
+proves clean.  Negative direction (mutation testing): a random illegal
+annotation seeded into a legal plan is always caught.  Split from
+test_plan_verifier.py so the module-level importorskip cannot take the
+deterministic tests down with it.
+"""
+import dataclasses
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt); skipping, not aborting collection")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.olap import analysis as ANA
+from repro.olap import optimizer as OPT
+from repro.olap import plan as P
+from repro.olap.table import Table
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+_PROMPTS = ("label: ", "fix: ", "keep? ")
+
+
+def table():
+    return Table({"category": ["a", "b", "a", "a", "c", "b", "a", "c"],
+                  "status": ["ok", "bad", "ok", "bad", "ok", "ok",
+                             "bad", "ok"]})
+
+
+@st.composite
+def plan_chains(draw):
+    """Random well-formed chains over the demo table: maps/corrects
+    (random prompt/col), declared filters, llm_filters."""
+    t = table()
+    node = P.Scan(t)
+    fresh = 0
+    schema = list(t.columns)
+    for _ in range(draw(st.integers(1, 5))):
+        op = draw(st.sampled_from(("map", "correct", "filter",
+                                   "llm_filter")))
+        col = draw(st.sampled_from(schema))
+        prompt = draw(st.sampled_from(_PROMPTS))
+        if op == "map":
+            out = f"out{fresh}"
+            fresh += 1
+            node = P.LLMMap(input=node, col=col, prompt=prompt,
+                            out_col=out, max_new=4)
+            schema.append(out)
+        elif op == "correct":
+            out = f"fix{fresh}"
+            fresh += 1
+            node = P.LLMCorrect(input=node, col=col, prompt=prompt,
+                                out_col=out, max_new=4)
+            schema.append(out)
+        elif op == "llm_filter":
+            node = P.LLMFilter(input=node, col=col, prompt=prompt,
+                               max_new=2)
+        else:
+            node = P.Filter(input=node, pred=lambda r: True,
+                            columns=frozenset({col}))
+    return node
+
+
+@given(plan=plan_chains())
+@settings(**SETTINGS)
+def test_verifier_accepts_every_optimizer_output(plan):
+    """For ANY well-formed chain: the plan verifies, the optimizer's
+    output verifies, and every firing was proved (optimize would have
+    raised otherwise)."""
+    assert [d for d in ANA.verify_plan(plan) if d.severity == "error"] == []
+    optimized, firings = OPT.optimize(plan, verify=True)
+    assert [d for d in ANA.verify_plan(optimized)
+            if d.severity == "error"] == []
+    assert all(f.verified for f in firings)
+    # rewrites preserve the output schema
+    assert ANA.output_schema(plan) == ANA.output_schema(optimized)
+
+
+@given(plan=plan_chains(), data=st.data())
+@settings(**SETTINGS)
+def test_verifier_rejects_seeded_mutations(plan, data):
+    """Mutation-test the verifier: seed a random illegal annotation
+    into an otherwise-legal optimized plan and it must be caught."""
+    optimized, _ = OPT.optimize(plan, verify=True)
+    nodes = P.chain(optimized)
+    mutation = data.draw(st.sampled_from(("dedup_derived", "fused_dep",
+                                          "missing_read")))
+    if mutation == "dedup_derived":
+        # dedup over a column written below it (or absent from Scan)
+        idx = [i for i, n in enumerate(nodes)
+               if n.kind in P.ROWWISE_LLM_KINDS]
+        if not idx:
+            return
+        i = data.draw(st.sampled_from(idx))
+        derived = sorted({c for below in nodes[i + 1:]
+                          for c in P.added_cols(below)})
+        if not derived:
+            return
+        bad = dataclasses.replace(nodes[i], dedup=True,
+                                  col=data.draw(st.sampled_from(derived)))
+        mutated = P.rebuild(nodes[:i] + [bad] + nodes[i + 1:])
+        expect = {"PLAN021"}
+    elif mutation == "fused_dep":
+        scan = P.chain(optimized)[-1]
+        mutated = P.LLMFused(input=scan, col="out0", prompt="p: ",
+                             outs=("out0", "x"), max_new=4,
+                             src_kind="map")
+        expect = {"PLAN033", "PLAN004"}
+    else:
+        scan = P.chain(optimized)[-1]
+        mutated = P.Filter(input=scan, pred=lambda r: True,
+                           columns=frozenset({"never_written"}))
+        expect = {"PLAN004"}
+    got = {d.code for d in ANA.verify_plan(mutated)}
+    assert got & expect, (got, expect)

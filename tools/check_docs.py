@@ -28,6 +28,9 @@ DOCS = [
     "src/repro/core/README.md",
     "src/repro/distributed/README.md",
     "src/repro/olap/README.md",
+    "src/repro/analysis/README.md",
+    "ROADMAP.md",
+    "CHANGES.md",
 ]
 
 PREFIXES = ("", "src/", "src/repro/")
