@@ -407,6 +407,9 @@ def _install(engine) -> Dict[str, JitCallRecorder]:
             "_decode": JitCallRecorder("_decode", engine._decode)}
     engine._insert = recs["_insert"]
     engine._decode = recs["_decode"]
+    if getattr(engine, "_seed", None) is not None:
+        recs["_seed"] = JitCallRecorder("_seed", engine._seed)
+        engine._seed = recs["_seed"]
     for b, fn in list(engine._prefill.items()):
         r = JitCallRecorder(f"_prefill[{b}]", fn)
         recs[r.name] = r
@@ -421,6 +424,8 @@ def _install(engine) -> Dict[str, JitCallRecorder]:
 def _restore(engine, recs: Dict[str, JitCallRecorder]) -> None:
     engine._insert = recs["_insert"].fn
     engine._decode = recs["_decode"].fn
+    if "_seed" in recs:
+        engine._seed = recs["_seed"].fn
     for b in list(engine._prefill):
         engine._prefill[b] = recs[f"_prefill[{b}]"].fn
     for b in list(engine._prefill_from):
@@ -433,6 +438,7 @@ def _restore(engine, recs: Dict[str, JitCallRecorder]) -> None:
 ENGINE_DONATIONS: Dict[str, Tuple[int, ...]] = {
     "_insert": (0,),     # slot_state
     "_decode": (1,),     # slot_state
+    "_seed": (0,),       # slot_state (paged prefix-block seeding)
 }
 
 

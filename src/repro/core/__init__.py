@@ -1,5 +1,6 @@
 """IOLM-DB core: instance-optimized model generation (the paper's
 contribution).  calibrate -> {prune, sparsify, quantize} -> policy."""
 from repro.core.compressed import (BlockSparseTensor, QEmbed, QTensor,
-                                   matmul, param_bytes, use_kernels)
+                                   current_backend, kernel_backend, matmul,
+                                   param_bytes, use_kernels)
 from repro.core.pipeline import InstanceOptimizer, Recipe

@@ -9,8 +9,11 @@ dispatches on the container type, so compression is transparent to all
 architecture families.
 
 The jnp paths here are the portable fallback (and the oracle for the
-Pallas kernels in ``repro.kernels``); on TPU the fused kernels take over
-via ``use_kernels(True)``.
+Pallas kernels in ``repro.kernels``); the fused kernels take over when
+the active :mod:`repro.kernels.backend` resolves to ``"pallas"`` —
+scoped per call site via :func:`kernel_backend`, threaded explicitly
+from ``IOLMSession(backend=…)`` down through pool and engine rather
+than flipped through a process-wide flag.
 
 Calibration: ``set_record_hook`` installs an eager-mode observer that the
 matmul dispatch (and the MoE block) feeds with (weight, activation)
@@ -19,26 +22,72 @@ norms / routing statistics without any model-code changes.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import functools
+import warnings
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-_USE_KERNELS = False
+from repro.kernels.backend import normalize_backend, resolve_backend
+
+# Process default (mutated only by the deprecated use_kernels() shim) and
+# the scoped override.  A ContextVar — not a module global — so engines
+# running under the fan-out scheduler, threads, or nested traces each see
+# their own backend.
+_BACKEND_DEFAULT = "auto"
+_BACKEND: contextvars.ContextVar = contextvars.ContextVar(
+    "kernel_backend", default=None)
+
 _RECORD_HOOK: Optional[Callable] = None
 _ROUTE_HOOK: Optional[Callable] = None
 
 
+@contextlib.contextmanager
+def kernel_backend(backend):
+    """Scope a KernelBackend over a block of (trace-time) compute.
+
+    Engines wrap their jit call sites in this, so the dispatch below picks
+    the engine's backend while tracing — no global state survives the
+    ``with`` block.
+    """
+    token = _BACKEND.set(normalize_backend(backend))
+    try:
+        yield
+    finally:
+        _BACKEND.reset(token)
+
+
+def current_backend() -> str:
+    """The resolved backend in effect: ``"reference"`` or ``"pallas"``."""
+    b = _BACKEND.get()
+    return resolve_backend(b if b is not None else _BACKEND_DEFAULT)
+
+
 def use_kernels(flag: bool) -> None:
-    """Route QTensor/BlockSparse matmuls through the Pallas kernels."""
-    global _USE_KERNELS
-    _USE_KERNELS = flag
+    """Deprecated: set the process-default backend.
+
+    Use ``IOLMSession(backend=…)`` / ``Engine(backend=…)`` or the scoped
+    :func:`kernel_backend` context manager instead.
+    """
+    warnings.warn(
+        "use_kernels() is deprecated; pass backend='pallas'/'reference' to "
+        "IOLMSession/Engine or use repro.core.compressed.kernel_backend()",
+        DeprecationWarning, stacklevel=2)
+    global _BACKEND_DEFAULT
+    _BACKEND_DEFAULT = "pallas" if flag else "reference"
 
 
 def kernels_enabled() -> bool:
-    return _USE_KERNELS
+    """Deprecated: query whether the current backend resolves to pallas."""
+    warnings.warn(
+        "kernels_enabled() is deprecated; use "
+        "repro.core.compressed.current_backend() == 'pallas'",
+        DeprecationWarning, stacklevel=2)
+    return current_backend() == "pallas"
 
 
 def set_record_hook(fn: Optional[Callable]) -> None:
@@ -280,13 +329,13 @@ def _q_matmul_jnp(x: jax.Array, w: QTensor) -> jax.Array:
 def matmul(x: jax.Array, w) -> jax.Array:
     """Universal ``x @ w`` over raw / quantized / block-sparse weights."""
     if isinstance(w, QTensor):
-        if _USE_KERNELS and w.bits == 8:
+        if w.bits == 8 and current_backend() == "pallas":
             from repro.kernels import ops as kops
             return kops.quant_matmul(x, w.q, w.scale, group=w.group,
                                      in_scale=w.in_scale)
         return _q_matmul_jnp(x, w)
     if isinstance(w, BlockSparseTensor):
-        if _USE_KERNELS and w.idx is not None:
+        if w.idx is not None and current_backend() == "pallas":
             from repro.kernels import ops as kops
             return kops.block_sparse_matmul(x, w.w, w.idx, bs=w.bs)
         return jnp.einsum("...i,io->...o", x, w.w.astype(x.dtype),

@@ -1,3 +1,5 @@
 """Pallas TPU kernels for the compute hot-spots IOLM-DB optimizes:
-int8 dequant-in-VMEM matmul, block-sparse (tile-skipping) matmul, and
-flash attention.  ops.py = jit'd wrappers, ref.py = pure-jnp oracles."""
+int8 dequant-in-VMEM matmul, block-sparse (tile-skipping) matmul, flash
+attention, and paged KV-cache decode attention.  ops.py = jit'd
+wrappers, ref.py = pure-jnp oracles, backend.py = the KernelBackend
+("reference" | "pallas" | "auto") selection API."""

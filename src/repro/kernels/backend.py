@@ -1,0 +1,40 @@
+"""KernelBackend: the explicit replacement for the ``use_kernels()`` flag.
+
+A backend names which implementation of the compute hot-spots runs:
+
+``"reference"``   pure-jnp paths (portable, the numerical oracle)
+``"pallas"``      the fused Pallas kernels (interpret-mode on CPU, so CI
+                  stays bit-faithful on hosts without a TPU)
+``"auto"``        resolve at use time: ``"pallas"`` on TPU, else
+                  ``"reference"``
+
+The backend is threaded explicitly — ``IOLMSession(backend=…)`` →
+``ModelPool`` → ``Engine`` → physical plan — instead of living in a
+process-wide mutable flag, so the fan-out scheduler can host engines
+with different backends and ``Query.explain()`` can show the choice.
+``repro.core.compressed.kernel_backend`` is the scoped context manager
+that engines wrap around their jit trace sites.
+"""
+from __future__ import annotations
+
+BACKENDS = ("reference", "pallas", "auto")
+
+
+def normalize_backend(backend) -> str:
+    """Validate and canonicalize a backend name (``None`` -> ``"auto"``)."""
+    if backend is None:
+        return "auto"
+    b = str(backend).lower()
+    if b not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {backend!r}; expected one of {BACKENDS}")
+    return b
+
+
+def resolve_backend(backend="auto") -> str:
+    """Resolve to a concrete backend: ``"reference"`` or ``"pallas"``."""
+    b = normalize_backend(backend)
+    if b == "auto":
+        import jax
+        return "pallas" if jax.default_backend() == "tpu" else "reference"
+    return b

@@ -4,22 +4,30 @@ Shape plumbing lives here: flattening batch dims, padding to tile
 multiples, head/batch reshapes for attention, and the interpret-mode
 fallback so the kernels run (slowly, but bit-faithfully) on CPU for
 tests.  ``repro.core.compressed.matmul`` and the model layers call these
-when ``use_kernels(True)`` is active.
+when the active KernelBackend resolves to ``"pallas"``.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.block_sparse import block_sparse_matmul_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.paged_attention import paged_attention_kernel
 from repro.kernels.quant_matmul import quant_matmul_kernel
 
 
-@functools.lru_cache(None)
-def _interpret_default() -> bool:
+def _interpret_default(*arrays) -> bool:
+    """Interpret-mode default, resolved per call from the inputs' actual
+    devices — never cached: tests (and multi-backend processes) change the
+    effective platform after import, and under ``jit`` the inputs are
+    tracers so the live default backend is the right answer."""
+    for a in arrays:
+        try:
+            devs = a.devices()
+        except Exception:            # tracers / abstract values
+            continue
+        return not any(d.platform == "tpu" for d in devs)
     return jax.default_backend() != "tpu"
 
 
@@ -33,10 +41,23 @@ def _pad_rows(x2, bm):
 
 def quant_matmul(x, q, scale, *, group: int, in_scale=None,
                  interpret=None):
-    """x [..., K] @ dequant(q, scale) with int8 codes kept in HBM."""
-    if interpret is None:
-        interpret = _interpret_default()
+    """x [..., K] @ dequant(q, scale) with int8 codes kept in HBM.
+
+    When the device resolution says off-TPU (``interpret=None`` and no
+    TPU input), this computes the reference dequantize-then-einsum
+    formula verbatim instead of emulating the tiled kernel: the tiling
+    changes f32 accumulation order, and the ``"pallas"`` backend must
+    be BYTE-identical to ``"reference"`` on CPU (the serving identity
+    gate in tests/test_paged_cache.py and ``benchmarks/roofline.py
+    --smoke``).  Pass ``interpret=True`` explicitly to run the real
+    kernel under the Pallas interpreter (tests/test_kernels.py)."""
     K, N = q.shape
+    if interpret is None:
+        if _interpret_default(x, q):
+            from repro.core.compressed import QTensor, _q_matmul_jnp
+            return _q_matmul_jnp(x, QTensor(q, scale, 8, group, (K, N),
+                                            in_scale))
+        interpret = False
     if in_scale is not None:
         x = (x.astype(jnp.float32) * in_scale).astype(x.dtype)
     x2 = x.reshape(-1, K)
@@ -53,9 +74,18 @@ def quant_matmul(x, q, scale, *, group: int, in_scale=None,
 
 
 def block_sparse_matmul(x, w, idx, *, bs: int, interpret=None):
-    """x [..., K] @ block-sparse w, skipping pruned tiles via idx."""
+    """x [..., K] @ block-sparse w, skipping pruned tiles via idx.
+
+    Off-TPU (``interpret=None`` resolution) this is the reference dense
+    einsum over the zero-filled ``w`` (same byte-identity contract as
+    ``quant_matmul``); ``interpret=True`` runs the gather kernel under
+    the interpreter."""
     if interpret is None:
-        interpret = _interpret_default()
+        if _interpret_default(x, w):
+            return jnp.einsum("...i,io->...o", x, w.astype(x.dtype),
+                              preferred_element_type=jnp.float32
+                              ).astype(x.dtype)
+        interpret = False
     K, N = w.shape
     x2 = x.reshape(-1, K)
     bm = 128 if x2.shape[0] >= 128 else 8
@@ -70,7 +100,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     interpret=None):
     """q [B, S, H, D], k/v [B, T, Kh, D] -> [B, S, H, D] (GQA-aware)."""
     if interpret is None:
-        interpret = _interpret_default()
+        interpret = _interpret_default(q, k)
     B, S, H, D = q.shape
     _, T, Kh, _ = k.shape
     G = H // Kh
@@ -90,6 +120,32 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                                t_real=t_real, q_offset=q_offset,
                                bq=bq, bkv=bkv, interpret=interpret)
     return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+def paged_attention(q, k_pool, v_pool, tables, lengths, *,
+                    softcap: float = 0.0, window: int = 0, interpret=None):
+    """Paged-KV decode attention.
+
+    q [S, 1, H, D] (one decode token per slot), k/v pools
+    [num_blocks, block_size, Kh, D], tables [S, T // block_size] int32
+    block ids per slot, lengths [S] int32 valid KV lengths
+    -> [S, 1, H, D].
+    """
+    if interpret is None:
+        interpret = _interpret_default(q, k_pool)
+    S, one, H, D = q.shape
+    assert one == 1, q.shape
+    _, _, Kh, _ = k_pool.shape
+    G = H // Kh
+    # heads split as (Kh, G) — the same ordering layers._masked_decode uses
+    # when it reshapes [B, 1, H, D] -> [B, 1, K, H//K, D].
+    qr = q[:, 0].reshape(S, Kh, G, D)
+    o = paged_attention_kernel(qr, k_pool, v_pool,
+                               jnp.asarray(tables, jnp.int32),
+                               jnp.asarray(lengths, jnp.int32),
+                               softcap=softcap, window=window,
+                               interpret=interpret)
+    return o.reshape(S, 1, H, D)
 
 
 def _largest_tile(n: int, cap: int = 256) -> int:

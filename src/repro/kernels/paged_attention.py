@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: paged KV-cache decode attention.
+
+The serving engine stores K/V in fixed-size blocks inside one global
+pool — ``[num_blocks, block_size, Kh, D]`` — and each decode slot owns a
+block *table* (``[slots, T // block_size]`` int32) mapping its logical
+positions onto pool blocks.  Shared prompt prefixes alias the same
+blocks across slots, so the kernel must gather K/V through the table
+instead of reading a contiguous ``[slot, T, ...]`` tensor.
+
+Decode is one query token per slot, so the kernel computes an *exact*
+softmax (not the online/flash recurrence): the grid walks the slot's
+blocks, accumulating the full ``[T, G]`` score matrix and a gathered
+``[T, D]`` V copy in VMEM scratch (T = max_len fits comfortably for
+serving-sized contexts), then on the last block applies the
+length/window mask and the same max-subtracted softmax as the reference
+``_sdpa`` — keeping greedy decode token-identical to the jnp path.
+
+The block table and per-slot lengths ride in scalar-prefetch operands
+(``PrefetchScalarGridSpec``) so the K/V index maps can dereference the
+table while Pallas schedules the block DMAs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, s_ref, v_scr, *,
+            nblk: int, bs: int, scale: float, softcap: float, window: int):
+    s_idx = pl.program_id(0)   # slot
+    j = pl.program_id(2)       # block within the slot's table
+
+    q = q_ref[0, 0]            # [G, D]
+    k = k_ref[0, :, 0, :]      # [bs, D]
+    # scores for this block, [bs, G]; contraction over D is exact math, so
+    # blocking T cannot change the result vs the one-shot einsum.
+    s = jax.lax.dot_general(k, q, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    pl.store(s_ref, (pl.ds(j * bs, bs), slice(None)), s)
+    pl.store(v_scr, (pl.ds(j * bs, bs), slice(None)), v_ref[0, :, 0, :])
+
+    @pl.when(j == nblk - 1)
+    def _done():
+        length = len_ref[s_idx]
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (nblk * bs, 1), 0)
+        valid = kpos < length
+        if window:
+            valid &= kpos >= length - window
+        logits = jnp.where(valid, s_ref[...], NEG_INF)   # [T, G]
+        m = jnp.max(logits, axis=0, keepdims=True)
+        p = jnp.exp(logits - m)
+        probs = p / p.sum(axis=0, keepdims=True)
+        out = jax.lax.dot_general(probs.astype(v_scr.dtype), v_scr[...],
+                                  (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q, k_pool, v_pool, tables, lengths, *,
+                           softcap: float = 0.0, window: int = 0,
+                           interpret: bool = False):
+    """q [S, Kh, G, D], pools [nb, bs, Kh, D], tables [S, nblk] int32,
+    lengths [S] int32 -> [S, Kh, G, D].  One decode token per slot."""
+    S, Kh, G, D = q.shape
+    nb, bs, Khp, _ = k_pool.shape
+    St, nblk = tables.shape
+    assert Kh == Khp and S == St and lengths.shape == (S,), \
+        (q.shape, k_pool.shape, tables.shape, lengths.shape)
+    T = nblk * bs
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S, Kh, nblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda s, h, j, tbl, ln: (s, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda s, h, j, tbl, ln: (tbl[s, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda s, h, j, tbl, ln: (tbl[s, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda s, h, j, tbl, ln: (s, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T, G), jnp.float32),     # full score matrix
+            pltpu.VMEM((T, D), v_pool.dtype),    # gathered V
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, nblk=nblk, bs=bs,
+                          scale=1.0 / math.sqrt(D),
+                          softcap=softcap, window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, Kh, G, D), q.dtype),
+        interpret=interpret,
+    )(tables, lengths, q, k_pool, v_pool)

@@ -91,6 +91,58 @@ def decode_step(params, cfg, cache, tokens, pos, *, max_len: int):
 
 
 # ---------------------------------------------------------------------------
+# paged KV cache (serving: block pools + per-slot block tables)
+# ---------------------------------------------------------------------------
+
+def supports_paged(cfg) -> bool:
+    """Whether the family can serve from a paged (block pool + block
+    table) KV layout.  rwkv carries no positional KV, and vlm/encdec
+    take the full-prefill path — they all stay on the contiguous
+    slot-stacked layout."""
+    return cfg.family in ("dense", "moe", "hybrid")
+
+
+def init_paged_cache(cfg, slots: int, num_blocks: int, block_size: int):
+    """Engine-wide paged decode state: KV block pools (every layer indexed
+    by the same block-id space) plus, for hybrid, slot-batched recurrent
+    states."""
+    if cfg.family == "hybrid":
+        return hybrid.init_paged_cache(cfg, slots, num_blocks, block_size)
+    return transformer.init_paged_cache(cfg, num_blocks, block_size)
+
+
+def paged_decode_step(params, cfg, cache, tables, tokens, pos, *,
+                      block_size: int, max_len: int,
+                      backend: str = "reference"):
+    """One token for every slot, attending through ``tables``
+    [slots, max_len // block_size].  ``backend`` picks the attention
+    implementation: ``"reference"`` gathers blocks in jnp, ``"pallas"``
+    runs the paged kernel (interpret-mode off-TPU)."""
+    return family_module(cfg).paged_decode_step(
+        params, cfg, cache, tables, tokens, pos, block_size=block_size,
+        max_len=max_len, backend=backend)
+
+
+def paged_insert(cfg, state, rows, slot_idxs, write_ids, *, block_size: int):
+    """Scatter a vmapped admission batch into the paged state: KV rows go
+    to the pool blocks named by ``write_ids`` [n, max_len // block_size]
+    (trash-block ids suppress writes for aliased prefix blocks), recurrent
+    rows go to ``slot_idxs``."""
+    if cfg.family == "hybrid":
+        return hybrid.paged_insert(cfg, state, rows, slot_idxs, write_ids,
+                                   block_size=block_size)
+    return transformer.paged_insert(cfg, state, rows, write_ids,
+                                    block_size=block_size)
+
+
+def paged_seed(cfg, state, entry_state, write_ids, *, block_size: int):
+    """Write a prefix-cache entry's KV into shared pool blocks so later
+    admissions alias them through their block tables instead of copying."""
+    return family_module(cfg).paged_seed(cfg, state, entry_state, write_ids,
+                                         block_size=block_size)
+
+
+# ---------------------------------------------------------------------------
 # prefix-sharing prefill (serving: template-heavy OLAP prompts)
 # ---------------------------------------------------------------------------
 

@@ -140,6 +140,106 @@ def decode_step(params: Params, cfg, cache, tokens, pos, *, max_len: int):
                     "mamba_tail": new_tail}
 
 
+# ---------------------------------------------------------------------------
+# paged serving state
+# ---------------------------------------------------------------------------
+#
+# Only the shared attention sites hold positional KV — the mamba states
+# are O(1) recurrent — so the paged layout pools just ``shared_kv``
+# ([n_sites, num_blocks, bs, Kh, hd], every site indexed by the same
+# block table) and keeps the recurrent states slot-stacked with the slot
+# axis *inside* the group axes ([G, K, slots, ...]) so the decode scan
+# over groups sees plain batched states.
+
+def init_paged_cache(cfg, slots: int, num_blocks: int, block_size: int):
+    G, K, tail, n_sites = layout(cfg)
+    dt = cfg.dtype
+    Kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    one = M.init_layer_state(cfg, slots, dt)
+    grouped = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (G, K) + a.shape), one)
+    kv = {"k": jnp.zeros((n_sites, num_blocks, block_size, Kh, hd), dt),
+          "v": jnp.zeros((n_sites, num_blocks, block_size, Kh, hd), dt)}
+    tail_states = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (tail,) + a.shape), one) if tail else None
+    return {"mamba_groups": grouped, "shared_kv": kv,
+            "mamba_tail": tail_states}
+
+
+def _scatter_rows(pool, rows, slot_idxs, axis: int):
+    """rows [n, ..., 1(batch), ...] -> pool with slot axis at ``axis``."""
+    r = jnp.moveaxis(rows, 0, axis)
+    r = r.reshape(r.shape[:axis + 1] + r.shape[axis + 2:])  # drop batch-1 axis
+    idx = (slice(None),) * axis + (slot_idxs,)
+    return pool.at[idx].set(r.astype(pool.dtype))
+
+
+def paged_insert(cfg, state, rows, slot_idxs, write_ids, *, block_size: int):
+    """Admit a vmapped prefill batch: recurrent states scatter into their
+    slots, shared-site KV scatters into the pool blocks at ``write_ids``."""
+    new = {
+        "mamba_groups": jax.tree.map(
+            lambda s, r: _scatter_rows(s, r, slot_idxs, 2),
+            state["mamba_groups"], rows["mamba_groups"]),
+        "shared_kv": TF.paged_write_blocks(
+            state["shared_kv"], rows["shared_kv"], write_ids,
+            block_size=block_size),
+        "mamba_tail": state["mamba_tail"],
+    }
+    if state["mamba_tail"] is not None:
+        new["mamba_tail"] = jax.tree.map(
+            lambda s, r: _scatter_rows(s, r, slot_idxs, 1),
+            state["mamba_tail"], rows["mamba_tail"])
+    return new
+
+
+def paged_seed(cfg, state, entry_state, write_ids, *, block_size: int):
+    """Seed shared prefix blocks from a prefix-cache entry.  Only the
+    attention KV is positional; the entry's recurrent states are consumed
+    per-row by ``prefill_from`` instead."""
+    rows = jax.tree.map(lambda a: a[None], entry_state["shared_kv"])
+    kv = TF.paged_write_blocks(state["shared_kv"], rows, write_ids,
+                               block_size=block_size)
+    return {"mamba_groups": state["mamba_groups"], "shared_kv": kv,
+            "mamba_tail": state["mamba_tail"]}
+
+
+def paged_decode_step(params: Params, cfg, cache, tables, tokens, pos, *,
+                      block_size: int, max_len: int,
+                      backend: str = "reference"):
+    B = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    x = L.embed(params, cfg, tokens)
+    G, K, tail, _ = layout(cfg)
+    shared = params["shared"]
+
+    def body(xc, xs):
+        group, states, kv = xs
+        xc, stacked = M.stack_apply(group, states, xc, cfg)
+        xc, kv2 = TF.paged_block_decode(shared, kv, xc, cfg, kind="G",
+                                        pos=pos, tables=tables,
+                                        block_size=block_size,
+                                        max_len=max_len, backend=backend)
+        return xc, (stacked, kv2)
+
+    x, (mstates, kvs) = jax.lax.scan(
+        body, x, (params["mamba_groups"], cache["mamba_groups"],
+                  cache["shared_kv"]), unroll=cfg.scan_unroll)
+    new_tail = cache["mamba_tail"]
+    if params["mamba_tail"] is not None:
+        def tbody(xc, xs):
+            p, st = xs
+            xc, st2 = M.block_apply(p, xc, cfg, state=st)
+            return xc, st2
+        x, new_tail = jax.lax.scan(tbody, x,
+                                   (params["mamba_tail"], cache["mamba_tail"]),
+                                   unroll=cfg.scan_unroll)
+    x = L.norm(x, params["ln_f"], cfg)
+    logits = L.unembed(params, cfg, x)
+    return logits, {"mamba_groups": mstates, "shared_kv": kvs,
+                    "mamba_tail": new_tail}
+
+
 def prefill(params: Params, cfg, tokens, *, max_len: int, lengths=None, **_):
     x = L.embed(params, cfg, tokens)
     B, S, _ = x.shape

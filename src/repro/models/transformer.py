@@ -378,6 +378,167 @@ def decode_step(params: Params, cfg, cache, tokens, pos, *, max_len: int):
 
 
 # ---------------------------------------------------------------------------
+# paged KV cache
+# ---------------------------------------------------------------------------
+#
+# The serving engine's paged layout replaces the per-slot contiguous
+# [slots, T, K, hd] tensors with one global pool of fixed-size blocks —
+# stacked entries [R, num_blocks, bs, K, hd], tail entries
+# [num_blocks, bs, K, hd] — plus a per-slot block table [slots, T // bs]
+# of int32 block ids shared by every layer (block id b addresses index b
+# in every layer's pool).  Admission scatters per-row prefill KV into the
+# table's blocks, and a shared template prefix is seeded once and aliased
+# by table entries instead of being copied per row.  Decode runs batched
+# over all slots (the pool is shared, so the per-row vmap of the
+# contiguous path does not apply) and attends through the table — either
+# by gathering in jnp (reference backend) or inside the paged Pallas
+# kernel (pallas backend).
+
+def init_paged_cache(cfg, num_blocks: int, block_size: int):
+    """Block-pool cache pytree mirroring the block structure."""
+    unit, R, tail = pattern_unit(cfg)
+    K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.dtype
+
+    def entry(stacked: bool):
+        shape = ((R, num_blocks, block_size, K, hd) if stacked
+                 else (num_blocks, block_size, K, hd))
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+    return {"blocks": [entry(True) for _ in unit],
+            "tail": [entry(False) for _ in range(tail)]}
+
+
+def paged_write_blocks(pool_entry, row_entry, write_ids, *, block_size: int):
+    """Scatter vmapped per-row contiguous KV into pool blocks.
+
+    ``row_entry`` leaves are [n, R, 1, T, K, hd] (stacked) or
+    [n, 1, T, K, hd] (tail); ``write_ids`` [n, T // block_size] names the
+    destination block per chunk (the engine points skipped chunks — e.g.
+    prefix blocks already aliased — at its trash block)."""
+    bs = block_size
+    ids = write_ids.reshape(-1)
+
+    def one(pool, rows):
+        n = rows.shape[0]
+        K, hd = rows.shape[-2], rows.shape[-1]
+        if rows.ndim == 6:                      # stacked [n, R, 1, T, K, hd]
+            R, T = rows.shape[1], rows.shape[3]
+            r = rows.reshape(n, R, T // bs, bs, K, hd)
+            r = jnp.moveaxis(r, 0, 1).reshape(R, n * (T // bs), bs, K, hd)
+            return pool.at[:, ids].set(r.astype(pool.dtype))
+        T = rows.shape[2]                       # tail [n, 1, T, K, hd]
+        r = rows.reshape(n * (T // bs), bs, K, hd)
+        return pool.at[ids].set(r.astype(pool.dtype))
+
+    return jax.tree.map(one, pool_entry, row_entry)
+
+
+def paged_insert(cfg, state, rows, write_ids, *, block_size: int):
+    """Scatter an admission batch's row caches (from vmapped prefill)
+    into the paged pools at ``write_ids`` [n, T // block_size]."""
+    return {
+        "blocks": [paged_write_blocks(state["blocks"][u], rows["blocks"][u],
+                                      write_ids, block_size=block_size)
+                   for u in range(len(state["blocks"]))],
+        "tail": [paged_write_blocks(state["tail"][i], rows["tail"][i],
+                                    write_ids, block_size=block_size)
+                 for i in range(len(state["tail"]))],
+    }
+
+
+def paged_seed(cfg, state, entry_state, write_ids, *, block_size: int):
+    """Write a prefix-cache entry's KV (a batch=1 contiguous cache) into
+    the shared blocks named by ``write_ids`` [1, T // block_size]."""
+    rows = jax.tree.map(lambda a: a[None], entry_state)
+    return paged_insert(cfg, state, rows, write_ids, block_size=block_size)
+
+
+def _paged_attn_block(p, c, x, cfg, *, kind: str, pos, tables,
+                      block_size: int, max_len: int, backend: str):
+    """Decode attention against block pools ``c`` ({"k","v"}
+    [nb, bs, K, hd]) through ``tables`` [B, T // bs].  pos: [B] int32."""
+    B = x.shape[0]
+    h = norm(x, p["ln1"], cfg)
+    positions = pos[:, None]
+    q, k, v = L._qkv(p["attn"], h, cfg, positions, _theta(cfg, kind))
+    nb, bs, K, hd = c["k"].shape
+    nblk = max_len // bs
+    # scatter this step's k/v into each slot's current block; every slot
+    # writes a distinct flat index (tables point active slots past any
+    # aliased prefix blocks, idle slots at their private blocks).
+    flat = tables[jnp.arange(B), pos // bs] * bs + pos % bs
+    ck = c["k"].reshape(nb * bs, K, hd).at[flat].set(
+        k[:, 0].astype(c["k"].dtype)).reshape(nb, bs, K, hd)
+    cv = c["v"].reshape(nb * bs, K, hd).at[flat].set(
+        v[:, 0].astype(c["v"].dtype)).reshape(nb, bs, K, hd)
+    win = cfg.window_size if kind == "L" else 0
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.paged_attention(q, ck, cv, tables, pos + 1,
+                                   softcap=cfg.attn_softcap, window=win)
+    else:
+        gk = ck[tables].reshape(B, nblk * bs, K, hd)
+        gv = cv[tables].reshape(B, nblk * bs, K, hd)
+        slots = jnp.arange(nblk * bs)[None, :]
+        valid = slots <= pos[:, None]
+        if win:
+            valid &= slots > pos[:, None] - win
+        out = _masked_decode(q, gk, gv, valid, cfg.attn_softcap)
+    a = matmul(out.reshape(B, 1, -1), p["attn"]["wo"])
+    if "ln1_post" in p:
+        a = norm(a, p["ln1_post"], cfg)
+    return a, {"k": ck, "v": cv}
+
+
+def paged_block_decode(p, c, x, cfg, *, kind: str, pos, tables,
+                       block_size: int, max_len: int, backend: str):
+    a, c2 = _paged_attn_block(p, c, x, cfg, kind=kind, pos=pos, tables=tables,
+                              block_size=block_size, max_len=max_len,
+                              backend=backend)
+    x = x + a
+    h = norm(x, p["ln2"], cfg)
+    return x + _mlp_section(p, h, cfg), c2
+
+
+def paged_decode_step(params: Params, cfg, cache, tables, tokens, pos, *,
+                      block_size: int, max_len: int,
+                      backend: str = "reference"):
+    """One token for every slot against the paged pools.  tokens [B,1];
+    pos [B] int32; tables [B, max_len // block_size] int32.
+    Returns (logits [B,1,V], new_cache)."""
+    B = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    x = L.embed(params, cfg, tokens)
+    unit, R, tail = pattern_unit(cfg)
+
+    def body(xc, xs):
+        member_params, member_cache = xs
+        new_caches = []
+        for u, kind in enumerate(unit):
+            xc, c2 = paged_block_decode(
+                member_params[u], member_cache[u], xc, cfg, kind=kind,
+                pos=pos, tables=tables, block_size=block_size,
+                max_len=max_len, backend=backend)
+            new_caches.append(c2)
+        return xc, new_caches
+
+    x, new_block_cache = jax.lax.scan(body, x,
+                                      (params["blocks"], cache["blocks"]),
+                                      unroll=cfg.scan_unroll)
+    new_tail = []
+    for i, p in enumerate(params["tail"]):
+        x, c2 = paged_block_decode(p, cache["tail"][i], x, cfg,
+                                   kind=unit[i % len(unit)], pos=pos,
+                                   tables=tables, block_size=block_size,
+                                   max_len=max_len, backend=backend)
+        new_tail.append(c2)
+    x = norm(x, params["ln_f"], cfg)
+    logits = L.unembed(params, cfg, x)
+    return logits, {"blocks": new_block_cache, "tail": new_tail}
+
+
+# ---------------------------------------------------------------------------
 # prefill: forward + cache population
 # ---------------------------------------------------------------------------
 

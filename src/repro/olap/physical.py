@@ -29,6 +29,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Union
 
+from repro.kernels.backend import resolve_backend
 from repro.olap import analysis as ANA
 from repro.olap import operators as OPS
 from repro.olap import optimizer as OPT
@@ -49,6 +50,7 @@ class PhysicalOp:
     node: P.PlanNode
     qsig: str
     engine: str          # "optimized" | "base"
+    backend: str         # resolved KernelBackend: "reference" | "pallas"
     placement: str       # "pool" | "private"
     prefix: str
     dedup: bool
@@ -85,7 +87,7 @@ class ExecutableOp:
 
 def lower(logical: P.PlanNode, *, optimize_models: bool = True,
           pooled: bool = False, use_optimizer: bool = True,
-          verify: bool = True) -> PhysicalPlan:
+          verify: bool = True, backend: str = "auto") -> PhysicalPlan:
     """plan -> verify -> optimize (each rewrite re-proved) -> verify ->
     physical steps.
 
@@ -115,6 +117,9 @@ def lower(logical: P.PlanNode, *, optimize_models: bool = True,
             raise ANA.PlanVerificationError(post)
     est = OPT.estimate(optimized, stats)
     engine = "optimized" if optimize_models else "base"
+    # "auto" resolves HERE (pallas on TPU, reference elsewhere) so
+    # EXPLAIN shows the kernel backend each op will actually run on
+    kbackend = resolve_backend(backend)
     placement = "pool" if pooled else "private"
     steps: List[Union[TableStep, PhysicalOp]] = []
     for node in reversed(P.chain(optimized)):
@@ -129,7 +134,7 @@ def lower(logical: P.PlanNode, *, optimize_models: bool = True,
         else:
             steps.append(PhysicalOp(
                 node=node, qsig=P.qsig(node), engine=engine,
-                placement=placement, prefix=node.prompt,
+                backend=kbackend, placement=placement, prefix=node.prompt,
                 dedup=getattr(node, "dedup", False),
                 max_new=node.max_new, est=est[id(node)]))
     return PhysicalPlan(logical=logical, optimized=optimized, steps=steps,

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.core.pipeline import InstanceOptimizer, Recipe
 from repro.core import policy as POL
+from repro.kernels.backend import normalize_backend
 from repro.olap import operators as OPS
 from repro.olap import physical as PHYS
 from repro.olap import plan as PLAN
@@ -133,7 +134,8 @@ class IOLMSession:
                  pool: Optional[ModelPool] = None,
                  devices: Optional[List] = None,
                  mesh=None,
-                 placement: str = "least_loaded"):
+                 placement: str = "least_loaded",
+                 backend: str = "auto"):
         self.params = params
         self.cfg = cfg
         self.tok = tokenizer or ByteTokenizer(max(cfg.vocab_size, 260))
@@ -143,7 +145,11 @@ class IOLMSession:
         self.calib_rows = calib_rows
         self.eval_rows = eval_rows
         self.model_cache = ModelCache()
-        self.engine_kw = engine_kw or {}
+        # KernelBackend for every engine this session builds (directly
+        # or through its pool); an explicit engine_kw["backend"] wins
+        self.backend = normalize_backend(backend)
+        self.engine_kw = dict(engine_kw or {})
+        self.engine_kw.setdefault("backend", self.backend)
         self.log: List[str] = []
         self.pool = pool
         if pool is not None and (devices is not None or mesh is not None):
@@ -328,15 +334,17 @@ class Query:
         (base vs instance-optimized recipe), prefix template, and pool
         placement.  Memoized until the plan or a routing flag changes
         (builder calls reassign ``_root``, invalidating the key)."""
+        backend = getattr(self.session, "backend", "auto")
         flags = (self.optimize, self.optimize_plan,
-                 self.session.pool is not None)
+                 self.session.pool is not None, backend)
         if (self._pplan is None or self._pplan_key is None
                 or self._pplan_key[0] is not self._root
                 or self._pplan_key[1] != flags):
             self._pplan = PHYS.lower(
                 self._root, optimize_models=self.optimize,
                 pooled=self.session.pool is not None,
-                use_optimizer=self.optimize_plan)
+                use_optimizer=self.optimize_plan,
+                backend=backend)
             self._pplan_key = (self._root, flags)
         return self._pplan
 
@@ -393,7 +401,8 @@ class Query:
             else:
                 lines.append(
                     f"  {i}. llm {step.node.kind} qsig={step.qsig} "
-                    f"engine={step.engine} placement={step.placement} "
+                    f"engine={step.engine} backend={step.backend} "
+                    f"placement={step.placement} "
                     f"dedup={'on' if step.dedup else 'off'} "
                     f"est_calls={step.est.invocations} "
                     f"prefix={step.prefix!r}")

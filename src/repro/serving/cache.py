@@ -104,6 +104,15 @@ class PrefixCache:
         self._d: "OrderedDict[Tuple, PrefixEntry]" = OrderedDict()
         self.hits = 0            # entry-level lookup hits
         self.misses = 0
+        # fn(key, entry) called on LRU eviction — paged engines subscribe
+        # so their block allocators can release the entry's shared blocks
+        # (a pool-shared cache holds entries from many engines; each
+        # subscriber ignores keys it never seeded)
+        self._evict_listeners: list = []
+
+    def add_evict_listener(self, fn) -> None:
+        if fn not in self._evict_listeners:
+            self._evict_listeners.append(fn)
 
     def key(self, prefix_ids: Sequence[int], version: str = "") -> Tuple:
         return (tuple(prefix_ids), version)
@@ -122,7 +131,9 @@ class PrefixCache:
         self._d[key] = e
         self._d.move_to_end(key)
         if len(self._d) > self.capacity:
-            self._d.popitem(last=False)
+            old_key, old_entry = self._d.popitem(last=False)
+            for fn in self._evict_listeners:
+                fn(old_key, old_entry)
         return e
 
     def __len__(self) -> int:

@@ -1,15 +1,20 @@
 """Serving engine: asynchronous continuous batching over fixed decode slots.
 
 TPU-adapted vLLM-style serving (see README.md in this package): XLA
-wants static shapes, so instead of paged KV blocks the engine keeps a
-**fixed pool of decode slots** — the KV cache is stacked per-row state
-with a leading slot axis, and the decode step is ``vmap`` of the
-model's single-row decode over that axis.  Slot admission is one
-jitted batched scatter ``leaf.at[slot_idxs].set(row_states)`` for the
-WHOLE admission batch, uniform across every architecture family
-(attention KV, rwkv state, mamba state, whisper cross-KV ... all have
-a leading slot axis by construction), compiled once per admission
-width.
+wants static shapes, so the engine keeps a **fixed set of decode
+slots**.  Families that support it (``api.supports_paged``) store KV in
+a **paged layout**: one global pool of fixed-size blocks shared by all
+slots plus a per-slot block table, so admission scatters per-row
+prefill KV into table-addressed blocks and a shared template prefix is
+seeded once and *aliased* by every row's table instead of copied —
+decode attends through the table (reference gather or the paged Pallas
+kernel, per the engine's ``KernelBackend``).  Other families — and
+sharded/mesh engines — keep the contiguous layout: stacked per-row
+state with a leading slot axis, decode as ``vmap`` of the model's
+single-row decode.  Either way slot admission is ONE jitted batched
+scatter for the whole admission batch, compiled once per admission
+width, and both layouts produce byte-identical greedy outputs
+(tests/test_paged_cache.py).
 
 The engine is an async core with three entry points:
 
@@ -72,9 +77,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compressed import kernel_backend
+from repro.kernels.backend import resolve_backend
 from repro.models import api
 from repro.serving.batcher import Batcher, Request, bucket_len
 from repro.serving.cache import PrefixCache, ResultCache
+from repro.serving.paged import BlockTableAllocator
 from repro.serving.sampler import SamplingConfig, sample
 from repro.training.data import ByteTokenizer
 
@@ -97,6 +105,9 @@ class EngineStats:
     prefix_hits: int = 0         # rows seeded from a shared prefix state
     prefill_tokens: int = 0      # padded prompt tokens actually prefilled
     prefill_tokens_saved: int = 0  # prefix tokens NOT re-prefilled per row
+    backend: str = ""            # resolved KernelBackend ("reference"/"pallas")
+    kv_blocks_in_use: int = 0    # peak KV blocks reachable (paged layout)
+    kv_blocks_shared: int = 0    # peak blocks aliased by >1 slot (paged)
     wall_s: float = 0.0
 
     @property
@@ -129,10 +140,19 @@ class Engine:
                  extra_inputs: Optional[Dict] = None,
                  sampling: Optional[SamplingConfig] = None,
                  device=None, mesh=None,
-                 param_shardings=None, cache_shardings=None):
+                 param_shardings=None, cache_shardings=None,
+                 backend: str = "auto", kv_layout: str = "auto",
+                 kv_block_size: int = 32):
         if device is not None and mesh is not None:
             raise ValueError("pass device= (single-device placement) OR "
                              "mesh= (sharded), not both")
+        if kv_layout not in ("auto", "paged", "contiguous"):
+            raise ValueError(f"kv_layout must be auto/paged/contiguous, "
+                             f"got {kv_layout!r}")
+        # KernelBackend is resolved once per engine ("auto" -> pallas on
+        # TPU, reference elsewhere) and scoped around every jit trace
+        # site via kernel_backend() — no process-global flag.
+        self.backend = resolve_backend(backend)
         self.device = device
         self.mesh = mesh
         self._cache_shardings = cache_shardings
@@ -180,9 +200,34 @@ class Engine:
         self._prefix_ids_memo: Dict[str, tuple] = {}
         self.batcher = Batcher(self.buckets)
         self.stats = EngineStats()
+        self.stats.backend = self.backend
         self.sampling = sampling or SamplingConfig()
         self._rid = 0
         self.extra_inputs = extra_inputs or {}
+
+        # --- KV layout: paged (block pool + per-slot table) vs contiguous ---
+        # Paged needs a family with positional KV in the standard layout
+        # and an unsharded cache (mesh/cache_shardings keep the stacked
+        # layout — block gathers would defeat the sharding rules).  The
+        # block size is the largest power of two <= kv_block_size that
+        # divides max_len; "auto" falls back to contiguous when that
+        # degenerates below 8 positions per block.
+        bs = 1
+        while bs * 2 <= kv_block_size and max_len % (bs * 2) == 0:
+            bs *= 2
+        want_paged = (kv_layout != "contiguous" and api.supports_paged(cfg)
+                      and mesh is None and cache_shardings is None
+                      and not (kv_layout == "auto" and bs < 8))
+        self._paged = want_paged
+        self._block_size = bs if want_paged else 0
+        self._seed = None
+        self._alloc = None
+        self._tables_dev = None
+        self._tables_dirty = True
+        if self._paged:
+            self._alloc = BlockTableAllocator(slots, max_len // bs)
+            if self.prefix_cache is not None:
+                self.prefix_cache.add_evict_listener(self._on_prefix_evict)
 
         # async serving state -------------------------------------------
         self._active: Dict[int, Request] = {}           # slot -> request
@@ -231,39 +276,82 @@ class Engine:
                     jax.vmap(row_prefill_from,
                              in_axes=(None, None, 0, None, 0)))
 
-        # --- batched slot-state scatter (uniform leading axis) ---
-        # row_states carry the vmapped admission axis in front; one call
-        # scatters the whole admission batch into its free slots.
-        def insert(slot_state, row_states, slot_idxs):
-            return jax.tree.map(
-                lambda s, r: s.at[slot_idxs].set(r.astype(s.dtype)),
-                slot_state, row_states)
-
-        self._insert = jax.jit(insert, donate_argnums=(0,))
-
-        # --- vmapped decode step over slots, sampling fused in ---
-        def row_decode(params, cache, tok, pos):
-            logits, cache = api.decode_step(params, cfg, cache,
-                                            tok[None, None], pos[None],
-                                            max_len=max_len)
-            return logits[0, -1], cache
-
         sampling_cfg = self.sampling  # static: closed over at trace time
 
-        def step(params, slot_state, toks, pos, ctr):
-            logits, state = jax.vmap(
-                row_decode, in_axes=(None, 0, 0, 0))(params, slot_state,
-                                                     toks, pos)
-            key = jax.random.fold_in(self._key, ctr)
-            nxt = sample(logits, key, temperature=sampling_cfg.temperature,
-                         top_k=sampling_cfg.top_k)
-            return nxt, state
+        if self._paged:
+            # --- paged admission scatter + prefix seeding + decode ---
+            # write_ids [n, max_len // bs] name the destination block per
+            # KV chunk (trash ids suppress chunks covered by aliased
+            # prefix blocks); recurrent rows scatter at slot_idxs.
+            blk = self._block_size
 
-        self._decode = jax.jit(step, donate_argnums=(1,))
+            def insert(slot_state, row_states, slot_idxs, write_ids):
+                return api.paged_insert(cfg, slot_state, row_states,
+                                        slot_idxs, write_ids, block_size=blk)
+
+            self._insert = jax.jit(insert, donate_argnums=(0,))
+
+            def seed(slot_state, entry_state, write_ids):
+                return api.paged_seed(cfg, slot_state, entry_state,
+                                      write_ids, block_size=blk)
+
+            self._seed = jax.jit(seed, donate_argnums=(0,))
+
+            # decode runs batched over ALL slots (the block pool is
+            # shared, so the per-row vmap of the contiguous path does
+            # not apply) and attends through the block tables
+            def step(params, slot_state, tables, toks, pos, ctr):
+                logits, state = api.paged_decode_step(
+                    params, cfg, slot_state, tables, toks[:, None], pos,
+                    block_size=blk, max_len=max_len, backend=self.backend)
+                key = jax.random.fold_in(self._key, ctr)
+                nxt = sample(logits[:, -1], key,
+                             temperature=sampling_cfg.temperature,
+                             top_k=sampling_cfg.top_k)
+                return nxt, state
+
+            self._decode = jax.jit(step, donate_argnums=(1,))
+        else:
+            # --- batched slot-state scatter (uniform leading axis) ---
+            # row_states carry the vmapped admission axis in front; one
+            # call scatters the whole admission batch into its free slots.
+            def insert(slot_state, row_states, slot_idxs):
+                return jax.tree.map(
+                    lambda s, r: s.at[slot_idxs].set(r.astype(s.dtype)),
+                    slot_state, row_states)
+
+            self._insert = jax.jit(insert, donate_argnums=(0,))
+
+            # --- vmapped decode step over slots, sampling fused in ---
+            def row_decode(params, cache, tok, pos):
+                logits, cache = api.decode_step(params, cfg, cache,
+                                                tok[None, None], pos[None],
+                                                max_len=max_len)
+                return logits[0, -1], cache
+
+            def step(params, slot_state, toks, pos, ctr):
+                logits, state = jax.vmap(
+                    row_decode, in_axes=(None, 0, 0, 0))(params, slot_state,
+                                                         toks, pos)
+                key = jax.random.fold_in(self._key, ctr)
+                nxt = sample(logits, key,
+                             temperature=sampling_cfg.temperature,
+                             top_k=sampling_cfg.top_k)
+                return nxt, state
+
+            self._decode = jax.jit(step, donate_argnums=(1,))
         self._slot_state = None
 
     # ------------------------------------------------------------------
     def _init_slots(self):
+        if self._paged:
+            state = api.init_paged_cache(self.cfg, self.slots,
+                                         self._alloc.num_blocks,
+                                         self._block_size)
+            if self.device is not None:
+                state = jax.device_put(state, self.device)
+            self._slot_state = state
+            return
         one = api.init_cache(self.cfg, 1, self.max_len, compact_local=False)
         state = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (self.slots,) + a.shape).copy(),
@@ -278,6 +366,62 @@ class Engine:
         elif self.device is not None:
             state = jax.device_put(state, self.device)
         self._slot_state = state
+
+    # -- paged block-table plumbing -------------------------------------
+    def _tables(self):
+        """Device mirror of the allocator's block tables, refreshed only
+        when host-side bookkeeping changed since the last decode."""
+        if self._tables_dirty or self._tables_dev is None:
+            t = jnp.asarray(self._alloc.tables)
+            if self.device is not None:
+                t = jax.device_put(t, self.device)
+            self._tables_dev = t
+            self._tables_dirty = False
+        return self._tables_dev
+
+    def _on_prefix_evict(self, key, entry) -> None:
+        """PrefixCache eviction: release the cache's reference on the
+        entry's shared blocks (slots still aliasing them keep them
+        pinned until they retire)."""
+        self._alloc.drop_prefix(key)
+
+    def _release_slot(self, s: int) -> None:
+        if self._paged:
+            self._alloc.release(s)
+            self._tables_dirty = True
+
+    def _paged_admit_ids(self, slot_idxs, pk, plen, entry):
+        """Block-table bookkeeping for one admission wave.
+
+        Seeds the prefix's FULL blocks into shared storage on first
+        sight (partial tail blocks stay private — the per-row prefill
+        state covers them), points every admitted row's table at the
+        shared prefix + its private remainder, and returns the
+        [n, nblk] write-id matrix for the jitted KV scatter, with
+        aliased chunks aimed at the trash block."""
+        A = self._alloc
+        shared = None
+        if pk is not None:
+            n_full = plen // self._block_size
+            shared = A.lookup(pk)
+            if shared is None and n_full:
+                shared = A.seed_blocks(pk, n_full)
+                if shared is not None:
+                    w = np.full((1, A.nblk), A.trash, np.int32)
+                    w[0, :n_full] = shared
+                    self._slot_state = self._seed(
+                        self._slot_state, entry.state, jnp.asarray(w))
+        w_ids = np.empty((len(slot_idxs), A.nblk), np.int32)
+        for i, s in enumerate(slot_idxs):
+            s = int(s)
+            w_ids[i] = A.private(s)
+            if shared is not None and len(shared):
+                A.alias(s, pk)
+                w_ids[i, :len(shared)] = A.trash
+            else:
+                A.occupy(s)
+        self._tables_dirty = True
+        return w_ids
 
     # -- async API ------------------------------------------------------
     def _encode_prefix(self, prefix: str):
@@ -366,6 +510,12 @@ class Engine:
         next ``step_begin``; the multi-device scheduler dispatches
         ``step_begin`` on every engine (distinct devices then compute
         concurrently) before collecting any of them."""
+        # every jit trace under this tick dispatches compressed matmuls
+        # (and paged attention) on THIS engine's backend
+        with kernel_backend(self.backend):
+            return self._step_begin()
+
+    def _step_begin(self):
         if self._slot_state is None:
             self._init_slots()
         finished: List[Request] = []
@@ -407,6 +557,7 @@ class Engine:
                     self.stats.prefill_tokens_saved += plen * seeded
                 else:
                     plen = 0
+                    entry = None
                     logits, rows = self._prefill[b](
                         self.params, jnp.asarray(toks),
                         jnp.asarray(lens, jnp.int32))
@@ -429,8 +580,14 @@ class Engine:
                     temperature=self.sampling.temperature,
                     top_k=self.sampling.top_k)).astype(np.int32)
                 slot_idxs = np.asarray(free[:len(take)], np.int32)
-                self._slot_state = self._insert(
-                    self._slot_state, rows, jnp.asarray(slot_idxs))
+                if self._paged:
+                    w_ids = self._paged_admit_ids(slot_idxs, pk, plen, entry)
+                    self._slot_state = self._insert(
+                        self._slot_state, rows, jnp.asarray(slot_idxs),
+                        jnp.asarray(w_ids))
+                else:
+                    self._slot_state = self._insert(
+                        self._slot_state, rows, jnp.asarray(slot_idxs))
                 for i, r in enumerate(take):
                     s = int(slot_idxs[i])
                     t0 = int(first[i])
@@ -439,6 +596,7 @@ class Engine:
                         # prefill token already ends the row (EOS) or
                         # exhausts the budget: retire without ever
                         # occupying a decode slot
+                        self._release_slot(s)
                         finished.extend(self._retire(r))
                         continue
                     self._active[s] = r
@@ -447,9 +605,19 @@ class Engine:
         if not self._active:
             return StepPending(finished, None)
         # --- decode one token for every active slot (launch only) ---
-        nxt, self._slot_state = self._decode(
-            self.params, self._slot_state, jnp.asarray(self._cur_tok),
-            jnp.asarray(self._cur_pos), jnp.int32(self._decode_ctr))
+        if self._paged:
+            used, sh = self._alloc.stats()
+            self.stats.kv_blocks_in_use = max(self.stats.kv_blocks_in_use,
+                                              used)
+            self.stats.kv_blocks_shared = max(self.stats.kv_blocks_shared, sh)
+            nxt, self._slot_state = self._decode(
+                self.params, self._slot_state, self._tables(),
+                jnp.asarray(self._cur_tok), jnp.asarray(self._cur_pos),
+                jnp.int32(self._decode_ctr))
+        else:
+            nxt, self._slot_state = self._decode(
+                self.params, self._slot_state, jnp.asarray(self._cur_tok),
+                jnp.asarray(self._cur_pos), jnp.int32(self._decode_ctr))
         self._decode_ctr += 1
         self.stats.decode_steps += 1
         self.stats.busy_slot_steps += len(self._active)
@@ -474,6 +642,7 @@ class Engine:
             if t == self.tok.EOS or len(r.out_ids) >= r.max_new \
                     or self._cur_pos[s] >= self.max_len - 1:
                 del self._active[s]
+                self._release_slot(s)
                 finished.extend(self._retire(r))
         return finished
 
@@ -498,6 +667,8 @@ class Engine:
         targets are suffixed ``[bucket]``."""
         out: Dict[str, object] = {"_insert": self._insert,
                                   "_decode": self._decode}
+        if self._seed is not None:
+            out["_seed"] = self._seed
         for b, fn in self._prefill.items():
             out[f"_prefill[{b}]"] = fn
         for b, fn in self._prefill_from.items():

@@ -69,9 +69,11 @@ class TestInjectedRegressions:
         engine = Engine(params, cfg)
         orig = engine._decode
 
-        def synced(params, state, toks, pos, ctr):
-            jax.debug.print("tick {}", ctr)      # the injected host sync
-            return orig(params, state, toks, pos, ctr)
+        # *rest keeps the wrapper layout-agnostic: the paged decode
+        # signature carries block tables between state and tokens
+        def synced(params, state, *rest):
+            jax.debug.print("tick {}", rest[-1])  # the injected host sync
+            return orig(params, state, *rest)
 
         engine._decode = jax.jit(synced, donate_argnums=(1,))
         report = JA.audit_engine(engine, prompts=["a", "b", "c"])

@@ -1,0 +1,215 @@
+"""Paged KV cache: block-table allocator semantics + engine byte identity.
+
+The acceptance bar for the paged decode fast path is *byte identity*:
+for a greedy workload, the paged layout (reference gather AND the
+Pallas paged-attention kernel, interpret-resolved on CPU) must produce
+exactly the outputs of the contiguous slot-stacked layout, across
+admission waves, slot reuse, and shared-prefix aliasing.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.serving.engine import Engine
+from repro.serving.paged import BlockTableAllocator
+
+
+# ---------------------------------------------------------------------------
+# allocator unit tests (pure host-side numpy)
+# ---------------------------------------------------------------------------
+
+class TestBlockTableAllocator:
+    def test_id_space_layout(self):
+        a = BlockTableAllocator(slots=3, blocks_per_slot=4)
+        assert a.num_blocks == 3 * 4 + 8 + 1
+        assert a.trash == a.num_blocks - 1
+        for s in range(3):
+            assert list(a.tables[s]) == list(range(s * 4, (s + 1) * 4))
+
+    def test_seed_alias_refcount_release(self):
+        a = BlockTableAllocator(slots=2, blocks_per_slot=4)
+        ids = a.seed_blocks("tpl", 2)
+        assert ids is not None and len(ids) == 2
+        assert a.seed_blocks("tpl", 2) is ids          # idempotent
+        n = a.alias(0, "tpl")
+        assert n == 2 and list(a.tables[0][:2]) == list(ids)
+        # private tail untouched past the aliased span
+        assert list(a.tables[0][2:]) == [2, 3]
+        a.alias(1, "tpl")
+        in_use, shared = a.stats()
+        assert shared == 2                              # both ids x 2 slots
+        a.release(0)
+        a.release(1)
+        # entry still holds its reference: blocks not yet free
+        assert a.lookup("tpl") is not None
+        free0 = len(a._free)
+        a.drop_prefix("tpl")
+        assert len(a._free) == free0 + 2
+        assert a.lookup("tpl") is None
+
+    def test_release_resets_stale_rows_to_private(self):
+        a = BlockTableAllocator(slots=2, blocks_per_slot=4)
+        a.seed_blocks("tpl", 3)
+        a.alias(0, "tpl")
+        a.release(0)
+        assert list(a.tables[0]) == [0, 1, 2, 3]
+        # a released slot re-admitted without a prefix is fully private
+        a.occupy(0)
+        assert list(a.tables[0]) == [0, 1, 2, 3]
+
+    def test_seed_fails_closed_when_free_list_short(self):
+        a = BlockTableAllocator(slots=2, blocks_per_slot=4, extra_blocks=1)
+        assert a.seed_blocks("big", 2) is None          # 1 free < 2 wanted
+        assert a.seed_blocks("fits", 1) is not None
+
+    def test_drop_prefix_keeps_blocks_pinned_by_live_slots(self):
+        a = BlockTableAllocator(slots=2, blocks_per_slot=4)
+        ids = a.seed_blocks("tpl", 2)
+        a.alias(0, "tpl")
+        a.drop_prefix("tpl")                            # cache evicted
+        assert all(int(b) not in a._free for b in ids)  # slot still reads
+        a.release(0)
+        assert all(int(b) in a._free for b in ids)
+
+    def test_stats_counts_entry_only_blocks(self):
+        a = BlockTableAllocator(slots=2, blocks_per_slot=4)
+        a.seed_blocks("tpl", 2)
+        in_use, shared = a.stats()
+        assert in_use == 2 and shared == 0
+
+
+# ---------------------------------------------------------------------------
+# engine-level byte identity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_tiny():
+    cfg = ModelConfig(name="pg", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=260,
+                      max_seq=256)
+    return cfg, api.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _family_model(arch):
+    cfg = registry.get_reduced(arch).replace(vocab_size=260)
+    return cfg, api.init_params(jax.random.PRNGKey(0), cfg)
+
+
+PROMPTS = ["fix: pyton", "fix: javascrpt", "fix: golag", "fix: rst",
+           "fix: kotln", "fix: hsakell"]
+
+
+def _serve(cfg, params, prompts, *, kv_layout, backend="reference",
+           prefix=None, slots=2, max_len=128):
+    eng = Engine(params, cfg, slots=slots, max_len=max_len,
+                 buckets=(16, 48, 64), use_result_cache=False,
+                 kv_layout=kv_layout, backend=backend)
+    outs = eng.generate(prompts, max_new=8, prefix=prefix)
+    return eng, outs
+
+
+class TestPagedByteIdentity:
+    @pytest.mark.parametrize("arch", [None, "qwen2-moe-a2.7b", "zamba2-7b"])
+    def test_paged_and_pallas_equal_contiguous(self, arch, dense_tiny):
+        """dense / moe / hybrid: contiguous-reference == paged-reference
+        == paged-pallas, byte for byte, across two admission waves."""
+        cfg, params = dense_tiny if arch is None else _family_model(arch)
+        _, base = _serve(cfg, params, PROMPTS, kv_layout="contiguous")
+        ep, paged = _serve(cfg, params, PROMPTS, kv_layout="paged")
+        ek, kern = _serve(cfg, params, PROMPTS, kv_layout="paged",
+                          backend="pallas")
+        assert ep._paged and ek._paged
+        assert paged == base
+        assert kern == base
+
+    def test_auto_layout_picks_paged_for_dense(self, dense_tiny):
+        cfg, params = dense_tiny
+        eng = Engine(params, cfg, max_len=128)
+        assert eng._paged and eng._block_size == 32
+        assert eng.stats.backend == "reference"         # auto on CPU
+
+    def test_unsupported_family_falls_back_to_contiguous(self):
+        cfg, params = _family_model("rwkv6-3b")
+        eng = Engine(params, cfg, kv_layout="paged", max_len=64)
+        assert not eng._paged                           # no positional KV
+
+    def test_tiny_block_auto_falls_back(self, dense_tiny):
+        cfg, params = dense_tiny
+        # max_len=36 -> largest pow2 block dividing it is 4 (< 8): auto
+        # degrades to contiguous, explicit "paged" still honors it
+        eng = Engine(params, cfg, max_len=36)
+        assert not eng._paged
+        eng2 = Engine(params, cfg, max_len=36, kv_layout="paged")
+        assert eng2._paged and eng2._block_size == 4
+
+
+class TestPagedEdgeCases:
+    # 45 chars -> >1 full 32-position block of prefix tokens
+    TMPL = "rewrite the category label in lowercase now: "
+
+    def test_prefix_longer_than_one_block_aliases(self, dense_tiny):
+        cfg, params = dense_tiny
+        prompts = [self.TMPL + s for s in
+                   ("Alpha", "BETA", "gamma", "DeLtA")]
+        _, base = _serve(cfg, params, prompts, kv_layout="contiguous",
+                         prefix=self.TMPL)
+        eng, outs = _serve(cfg, params, prompts, kv_layout="paged",
+                           prefix=self.TMPL)
+        assert outs == base
+        # 45+ prefix tokens / 32-position blocks -> 1 full shared block,
+        # aliased by both slots of each admission wave
+        assert eng.stats.kv_blocks_shared >= 1
+        assert eng.stats.prefix_hits > 0
+
+    def test_slot_retire_and_reuse_stays_identical(self, dense_tiny):
+        """More requests than slots: every slot is retired and re-used
+        with stale table entries reset in between (3+ waves through 2
+        slots, ragged lengths so retirement interleaves)."""
+        cfg, params = dense_tiny
+        prompts = [f"row {i}: " + "v" * (3 + 5 * (i % 3))
+                   for i in range(7)]
+        _, base = _serve(cfg, params, prompts, kv_layout="contiguous")
+        eng, outs = _serve(cfg, params, prompts, kv_layout="paged")
+        assert outs == base
+        # drained engine: no slot occupies any block
+        used, shared = eng._alloc.stats()
+        assert shared == 0 and not eng._alloc._occupied
+
+    def test_aliasing_across_slots_counts_shared_blocks(self, dense_tiny):
+        cfg, params = dense_tiny
+        prompts = [self.TMPL + f"value {i}" for i in range(4)]
+        eng = Engine(params, cfg, slots=4, max_len=128,
+                     buckets=(16, 48, 64), use_result_cache=False,
+                     kv_layout="paged")
+        outs = eng.generate(prompts, max_new=6, prefix=self.TMPL)
+        assert len(outs) == 4
+        # one admission wave of 4 slots all aliasing the same template
+        assert eng.stats.kv_blocks_shared >= 1
+        # seeded entry survives the drain (pinned by the prefix cache)
+        _, pkey = eng._prefix_ids_memo[self.TMPL]
+        assert eng._alloc.lookup(pkey) is not None
+
+    def test_prefix_cache_eviction_releases_blocks(self, dense_tiny):
+        cfg, params = dense_tiny
+        from repro.serving.cache import PrefixCache
+        eng = Engine(params, cfg, slots=2, max_len=128,
+                     buckets=(16, 48, 64), use_result_cache=False,
+                     kv_layout="paged", prefix_cache=PrefixCache(capacity=1))
+        t1 = "first shared template prefix padding padding: "
+        t2 = "second shared template prefix padding padding: "
+        eng.generate([t1 + "a", t1 + "b"], max_new=4, prefix=t1)
+        free0 = len(eng._alloc._free)
+        eng.generate([t2 + "a", t2 + "b"], max_new=4, prefix=t2)
+        # t1's entry was evicted (capacity 1): its shared blocks went
+        # back to the free list once its aliasing slots retired
+        assert len(eng._alloc._entries) == 1
+        assert len(eng._alloc._free) == free0
+
+    def test_engine_stats_carry_paged_fields(self, dense_tiny):
+        cfg, params = dense_tiny
+        eng, _ = _serve(cfg, params, PROMPTS[:2], kv_layout="paged")
+        assert eng.stats.backend == "reference"
+        assert eng.stats.kv_blocks_in_use > 0

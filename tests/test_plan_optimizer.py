@@ -391,7 +391,7 @@ rules fired:
 
 physical plan:
   1. table filter
-  2. llm map qsig=31aef8a83219 engine=base placement=private dedup=on est_calls=2 prefix='label: '
+  2. llm map qsig=31aef8a83219 engine=base backend=reference placement=private dedup=on est_calls=2 prefix='label: '
 
 estimated LLM cost: 64 -> 16 prompt-tokens (4.0x)"""
 

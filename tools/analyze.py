@@ -132,6 +132,11 @@ def main(argv=None) -> int:
                     help="rewrite the baseline from current findings")
     ap.add_argument("--out", default="",
                     help="also write the report to this path")
+    ap.add_argument("--assert-no-callbacks", action="store_true",
+                    help="fail on ANY JIT001 (host callback on the "
+                         "jitted hot path), baseline or not — CI runs "
+                         "this so the paged decode step stays free of "
+                         "device->host round trips")
     args = ap.parse_args(argv)
     if args.all or not (args.plan or args.jit):
         args.plan = args.jit = True
@@ -160,6 +165,14 @@ def main(argv=None) -> int:
     if args.out:
         with open(args.out, "w") as f:
             f.write(D.render_json(diags, extra=extra) + "\n")
+
+    if args.assert_no_callbacks:
+        cbs = [d for d in diags if d.code == "JIT001"]
+        if cbs:
+            print(f"\n--assert-no-callbacks: {len(cbs)} host callback(s) "
+                  "on the jitted hot path:", file=sys.stderr)
+            print(D.render_text(cbs), file=sys.stderr)
+            return 1
 
     if args.baseline and os.path.exists(args.baseline):
         base = D.load_baseline(args.baseline)

@@ -25,6 +25,7 @@ DOCS = [
     "docs/ARCHITECTURE.md",
     "README.md",
     "src/repro/serving/README.md",
+    "src/repro/kernels/README.md",
     "src/repro/core/README.md",
     "src/repro/distributed/README.md",
     "src/repro/olap/README.md",
