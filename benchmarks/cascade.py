@@ -1,0 +1,165 @@
+"""Model-cascade benchmark: full-model row invocations with the
+confidence-calibrated cascade on vs base-only — the instance-optimized
+proxy answers the easy rows and only low-confidence rows escalate to
+the base model (the physical-plan strategy in olap/physical.py, fitted
+by core/calibrate.fit_confidence_threshold).
+
+  PYTHONPATH=src python benchmarks/cascade.py [--smoke] [--json PATH]
+
+Workload (skewed confidence): the ``correct`` task from the training
+mixture, whose prompts the benchmark model answers with high
+confidence on most rows — exactly the shape a cascade exploits: the
+8-bit proxy agrees with the base model on the bulk of the column and
+the fitted threshold routes only the disagreeing tail to the base
+engine.  Reported per cell: full-model (base-engine) row invocations,
+task accuracy against the workload targets, escalation rate, and the
+fitted threshold.  Assertions (the acceptance bar):
+
+  - cascade makes >= 2x fewer full-model row invocations than
+    base-only at equal accuracy within the configured budget;
+  - accuracy budget 0 produces output byte-identical to base-only
+    (the exactness contract).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import Csv, load_model, task_accuracy
+from repro.core.pipeline import Recipe
+from repro.olap.query import IOLMSession, Query
+from repro.olap.table import Table
+from repro.training import data as D
+
+MAX_NEW = 8
+BUDGET = 0.2
+ENGINE_KW = dict(slots=4, max_len=128, buckets=(48, 96))
+PROMPT = "fix the typo: "
+
+
+def workload(n_rows: int):
+    rows = D.workload_rows("correct", n_rows)
+    return Table({"text": [r.text for r in rows]}), rows
+
+
+def cascade_query(t, session, *, budget, cascade="force"):
+    return (Query(t, session, cascade_budget=budget, cascade=cascade)
+            .llm_correct("text", prompt=PROMPT, out_col="fixed",
+                         max_new=MAX_NEW))
+
+
+def base_query(t, session):
+    return (Query(t, session, optimize=False)
+            .llm_correct("text", prompt=PROMPT, out_col="fixed",
+                         max_new=MAX_NEW))
+
+
+def fresh_session(cfg, params, tok):
+    # fresh session per cell: no model/result-cache carryover
+    return IOLMSession(params, cfg, tokenizer=tok, acc_floor=0.85,
+                       recipes=[Recipe(name="w8", wbits=8,
+                                       quant_method="absmax")],
+                       engine_kw=dict(ENGINE_KW))
+
+
+def run_cell(q):
+    t0 = time.time()
+    out = q.run()
+    wall = time.time() - t0
+    # full-model rows: every row of a base-engine op, only the
+    # escalated rows of a cascade op, none of a pure proxy op
+    full = sum(s.invocations if s.engine == "base" else s.escalated
+               for s in q.last_run_stats)
+    return {"outs": out["fixed"], "wall_s": round(wall, 3),
+            "full_rows": full, "stats": q.last_run_stats}
+
+
+def main(csv: Csv | None = None, *, smoke: bool = False,
+         json_path: str | None = None) -> dict:
+    csv = csv or Csv()
+    n_rows = 16 if smoke else 64
+    print(f"\n== model cascade: proxy + calibrated escalation vs "
+          f"base-only ({n_rows} rows, budget {BUDGET:g}) ==")
+    cfg, params, tok = load_model()
+    t, rows = workload(n_rows)
+
+    base = run_cell(base_query(t, fresh_session(cfg, params, tok)))
+    prox = run_cell(cascade_query(t, fresh_session(cfg, params, tok),
+                                  budget=None, cascade="off"))
+    casc = run_cell(cascade_query(t, fresh_session(cfg, params, tok),
+                                  budget=BUDGET))
+    zero = run_cell(cascade_query(t, fresh_session(cfg, params, tok),
+                                  budget=0.0))
+
+    (cs,) = casc["stats"]
+    acc_base = task_accuracy(base["outs"], rows)
+    acc_prox = task_accuracy(prox["outs"], rows)
+    acc_casc = task_accuracy(casc["outs"], rows)
+    esc_rate = cs.escalated / n_rows
+    ratio = base["full_rows"] / max(1, casc["full_rows"])
+    thr = cs.threshold if cs.threshold is not None else float("nan")
+
+    print(f"  base-only  full-model rows {base['full_rows']:4d}  "
+          f"acc {acc_base:.2f}  wall {base['wall_s']:.2f}s")
+    print(f"  proxy-only full-model rows {prox['full_rows']:4d}  "
+          f"acc {acc_prox:.2f}  wall {prox['wall_s']:.2f}s")
+    print(f"  cascade    full-model rows {casc['full_rows']:4d}  "
+          f"acc {acc_casc:.2f}  wall {casc['wall_s']:.2f}s  "
+          f"(escalation {esc_rate:.0%}, threshold "
+          f"{'inf' if math.isinf(thr) else f'{thr:.4f}'})")
+    csv.add("cascade/base_only", base["wall_s"] * 1e6,
+            f"full_rows={base['full_rows']};acc={acc_base:.2f}")
+    csv.add("cascade/proxy_only", prox["wall_s"] * 1e6,
+            f"full_rows={prox['full_rows']};acc={acc_prox:.2f}")
+    csv.add("cascade/cascade", casc["wall_s"] * 1e6,
+            f"full_rows={casc['full_rows']};acc={acc_casc:.2f};"
+            f"ratio={ratio:.1f}x;escalation={esc_rate:.2f}")
+
+    assert ratio >= 2.0, \
+        f"cascade must cut full-model rows >= 2x, got {ratio:.1f}x"
+    assert acc_casc >= acc_base - BUDGET, \
+        f"cascade accuracy {acc_casc} fell below base {acc_base} - {BUDGET}"
+    assert zero["outs"] == base["outs"], \
+        "budget-0 cascade must be byte-identical to base-only"
+    (zs,) = zero["stats"]
+    assert zs.escalated == zs.invocations  # every (deduped) row escalated
+    print(f"  [ok] {ratio:.1f}x fewer full-model rows at accuracy "
+          f"{acc_casc:.2f} (base {acc_base:.2f}, budget {BUDGET:g}); "
+          f"budget-0 byte-identical to base-only")
+
+    result = {"bench": "cascade", "smoke": smoke, "rows": n_rows,
+              "budget": BUDGET,
+              "full_rows_base": base["full_rows"],
+              "full_rows_cascade": casc["full_rows"],
+              "ratio": round(ratio, 2),
+              "escalation_rate": round(esc_rate, 3),
+              "threshold": None if math.isinf(thr) else round(thr, 4),
+              "acc_base": round(acc_base, 3),
+              "acc_proxy": round(acc_prox, 3),
+              "acc_cascade": round(acc_casc, 3),
+              "wall_s_base": base["wall_s"],
+              "wall_s_proxy": prox["wall_s"],
+              "wall_s_cascade": casc["wall_s"],
+              "budget0_byte_identical": True}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"[cascade] wrote {json_path}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results")
+    args = ap.parse_args()
+    main(smoke=args.smoke, json_path=args.json)

@@ -164,6 +164,16 @@ def readme_results_table() -> str:
                 f"{c['rows_per_s']:.1f} | {c['v5e_rows_per_s']:.0f} | "
                 f"{c['resident']} resident models |")
             n += 1
+    casc = _latest("cascade")
+    if casc:
+        lines.append(
+            f"| cascade | budget {casc['budget']:g} | "
+            f"{casc['rows'] / max(casc['wall_s_cascade'], 1e-9):.1f} | — | "
+            f"{casc['ratio']:g}x fewer full-model rows "
+            f"({casc['full_rows_base']} → {casc['full_rows_cascade']}), "
+            f"acc {casc['acc_base']:.2f} → {casc['acc_cascade']:.2f}, "
+            f"escalation {casc['escalation_rate'] * 100:.0f}% |")
+        n += 1
     dp = _latest("device_parallel")
     for c in (dp or {}).get("cells") or []:
         lines.append(
@@ -178,7 +188,7 @@ def readme_results_table() -> str:
     lines.append("")
     lines.append("_CPU `--smoke` numbers from this container; `v5e` is "
                  "the roofline projection on the TPU target (aggregate "
-                 "over resident engines).  Regenerate: run the three "
+                 "over resident engines).  Regenerate: run the four "
                  "benchmarks with `--json results/BENCH_<name>.json`, "
                  "then `python benchmarks/render_experiments.py "
                  "--readme`._")

@@ -29,6 +29,9 @@ SECTIONS = {
     "optimizer": ("benchmarks.optimizer",
                   "semantic plan rules on vs off: LLM row invocations "
                   "(pushdown + dedup + fusion)"),
+    "cascade": ("benchmarks.cascade",
+                "confidence-calibrated proxy->base cascade vs "
+                "base-only: full-model row invocations"),
     "multi_tenant": ("benchmarks.multi_tenant",
                      "aggregate rows/s vs tenant count under a fixed "
                      "pool byte budget"),

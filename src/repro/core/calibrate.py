@@ -42,11 +42,22 @@ class WeightStats:
     H: Optional[np.ndarray] = None        # [d_in, d_in] (or [E, d_in, d_in])
     sqnorm: Optional[np.ndarray] = None   # [d_in] (or [E, d_in])
     amax: Optional[np.ndarray] = None     # [d_in] (or [E, d_in])
+    count_e: Optional[np.ndarray] = None  # stacked experts: per-expert rows [E]
     route_count: Optional[np.ndarray] = None  # routers only: [E]
     route_prob: Optional[np.ndarray] = None   # routers only: [E]
 
     def merge_norm(self):
-        """Per-channel RMS norm of inputs (Wanda metric)."""
+        """Per-channel RMS norm of inputs (Wanda metric).
+
+        Stacked-expert stats (``sqnorm`` is [E, d]) normalize each
+        expert by ITS row count: dividing by the global ``count`` (the
+        sum over experts) deflated every expert's norm by its routing
+        share, biasing the Wanda metric toward heavily-routed experts.
+        """
+        if self.sqnorm is not None and self.sqnorm.ndim == 2 \
+                and self.count_e is not None:
+            denom = np.maximum(self.count_e, 1).astype(np.float64)
+            return np.sqrt(self.sqnorm / denom[:, None])
         return np.sqrt(self.sqnorm / max(self.count, 1))
 
 
@@ -67,6 +78,7 @@ class Recorder:
         self.hessian = hessian
         self.stats: Dict[str, WeightStats] = {}
         self.block_sim: Dict[str, float] = {}
+        self._block_acc: Dict[str, List[float]] = {}   # path -> [sum, count]
         self._id2path: Dict[int, str] = {}
         self.n_tokens = 0
 
@@ -113,7 +125,11 @@ class Recorder:
             st.amax = np.maximum(st.amax, np.abs(xm).max(1))
             if self.hessian:
                 st.H += np.einsum("eci,ecj->eij", xm, xm, optimize=True)
-            st.count += int(np.asarray(valid).sum())
+            rows_e = np.asarray(valid, np.int64)        # per-expert rows [E]
+            if st.count_e is None:
+                st.count_e = np.zeros((E,), np.int64)
+            st.count_e += rows_e
+            st.count += int(rows_e.sum())
             return
         xf = np.asarray(x, np.float32).reshape(-1, x.shape[-1])  # [N, d_in]
         d = xf.shape[1]
@@ -145,15 +161,72 @@ class Recorder:
         a = np.asarray(x_in, np.float32).reshape(-1)
         b = np.asarray(x_out, np.float32).reshape(-1)
         cos = float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-9))
-        # average if a block is visited multiple times (shared blocks)
-        if path in self.block_sim:
-            self.block_sim[path] = 0.5 * (self.block_sim[path] + cos)
-        else:
-            self.block_sim[path] = cos
+        # blocks visited multiple times (hybrid shared block) accumulate
+        # sum+count here; finish() divides ONCE.  A running pairwise
+        # average (0.5*(old+new)) weights visit k by 2^-(n-k) — the last
+        # visit dominates exponentially instead of counting 1/n.
+        acc = self._block_acc.setdefault(path, [0.0, 0])
+        acc[0] += cos
+        acc[1] += 1
 
     def finish(self) -> CalibStats:
+        self.block_sim = {p: s / n for p, (s, n) in self._block_acc.items()}
         return CalibStats(weights=self.stats, block_sim=self.block_sim,
                           n_tokens=self.n_tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeCalibration:
+    """Fitted acceptance rule for a proxy→base model cascade.
+
+    ``threshold`` is the smallest confidence at which proxy answers are
+    accepted; rows with ``confidence < threshold`` escalate to the base
+    model.  ``expected_escalation`` is the escalation rate the fit
+    predicts on its own sample — the number the physical planner's cost
+    inequality and ``EXPLAIN`` report."""
+    threshold: float
+    expected_escalation: float
+    accuracy_budget: float
+    n_fit: int
+
+
+def fit_confidence_threshold(confidences, agreements,
+                             accuracy_budget: float) -> CascadeCalibration:
+    """Fit the cascade acceptance threshold on a held-out probe.
+
+    ``confidences[i]`` is the proxy's confidence on holdout row i and
+    ``agreements[i]`` whether the proxy's answer matched the base
+    model's.  The fit picks the SMALLEST threshold (most rows accepted,
+    fewest escalations) such that accepted-but-wrong rows stay within
+    the per-op accuracy budget, measured against the WHOLE sample:
+
+        |{i : conf_i >= thr  and  not agree_i}| / n  <=  accuracy_budget
+
+    Lowering the threshold only grows the accepted set, so the
+    constraint is monotone and the scan below finds the optimum.  A
+    budget of 0 (or none satisfiable) returns ``threshold = inf``:
+    every row escalates and the cascade degenerates to base-only —
+    the exactness contract (tests/test_cascade.py).  Deterministic:
+    the result is a pure function of the (sorted) sample.
+    """
+    conf = np.asarray(confidences, np.float64)
+    agree = np.asarray(agreements, bool)
+    n = conf.size
+    if accuracy_budget is None or accuracy_budget <= 0.0 or n == 0:
+        return CascadeCalibration(threshold=float("inf"),
+                                  expected_escalation=1.0,
+                                  accuracy_budget=float(accuracy_budget or 0.0),
+                                  n_fit=int(n))
+    best = float("inf")
+    for thr in np.unique(conf):          # ascending: first hit is smallest
+        wrong = int(np.sum((conf >= thr) & ~agree))
+        if wrong <= accuracy_budget * n:
+            best = float(thr)
+            break
+    esc = float(np.mean(conf < best)) if np.isfinite(best) else 1.0
+    return CascadeCalibration(threshold=best, expected_escalation=esc,
+                              accuracy_budget=float(accuracy_budget),
+                              n_fit=int(n))
 
 
 def _path_str(path) -> str:

@@ -350,7 +350,11 @@ class InstanceOptimizer:
 def _expert_stats(st, e):
     if st is None or st.sqnorm is None:
         return None
-    return C.WeightStats(shape=tuple(st.shape[1:]), count=st.count,
+    # per-expert row count, NOT the global sum over experts: the Wanda
+    # act_norm divides sqnorm[e] by this, and the global count deflates
+    # lightly-routed experts' norms by their routing share
+    count = int(st.count_e[e]) if st.count_e is not None else st.count
+    return C.WeightStats(shape=tuple(st.shape[1:]), count=count,
                          H=None if st.H is None else st.H[e],
                          sqnorm=st.sqnorm[e], amax=st.amax[e])
 

@@ -426,6 +426,14 @@ def _verify_fusion(before: P.PlanNode, after: P.PlanNode,
                 "PLAN031",
                 f"constituent max_new={p.max_new} != fused "
                 f"max_new={fused.max_new}", where))
+        if getattr(p, "accuracy_budget", None) != fused.accuracy_budget:
+            diags.append(Diagnostic(
+                "PLAN031",
+                f"constituent accuracy_budget="
+                f"{getattr(p, 'accuracy_budget', None)} != fused "
+                f"accuracy_budget={fused.accuracy_budget} — one fused "
+                "pass has one cascade threshold, which would loosen the "
+                "stricter constituent's contract", where))
     # (2) output fan-out: the fused outs are exactly the constituents'
     # outs in execution (scan->root) order
     expect: Tuple[str, ...] = ()

@@ -65,6 +65,36 @@ JOIN_FANOUT = 2
 DEFAULT_VALUE_TOKENS = 32   # derived columns: value length unknown
 SAMPLE = 64                 # rows sampled for column statistics
 
+# --- cascade cost model (olap/physical.py reads these) ---------------------
+# A cascade runs EVERY row through the instance-optimized proxy and
+# re-submits only low-confidence rows to the base model, so its cost is
+#   est_escalation * base_cost + CASCADE_PROXY_COST_FACTOR * base_cost
+# and the planner picks engine="cascade" exactly when that beats
+# base_cost alone, i.e. est_escalation + proxy_factor < 1.  The proxy
+# factor is the compressed model's relative per-row cost (quantized
+# weights, smaller matmuls; benchmarks/engine.py supports ~4x).
+CASCADE_PROXY_COST_FACTOR = 0.25
+
+
+def predicted_escalation(accuracy_budget: Optional[float]) -> float:
+    """Planner-side prior on the cascade escalation rate for a given
+    accuracy budget, used BEFORE any threshold is fit (the fitted rate
+    from ``core.calibrate.fit_confidence_threshold`` replaces it at run
+    time).  Monotone: a tighter budget accepts fewer proxy answers, so
+    more rows escalate; budget 0 (or None) escalates everything — the
+    cascade degenerates to base-only and the cost inequality can never
+    choose it."""
+    if accuracy_budget is None or accuracy_budget <= 0.0:
+        return 1.0
+    return min(1.0, 0.05 + 0.05 / accuracy_budget)
+
+
+def cascade_wins(accuracy_budget: Optional[float]) -> bool:
+    """The cost inequality ``esc * base + proxy < base`` with both sides
+    normalized by base_cost (per-row costs cancel)."""
+    return (predicted_escalation(accuracy_budget)
+            + CASCADE_PROXY_COST_FACTOR < 1.0)
+
 
 @dataclass
 class ColStats:
@@ -230,16 +260,20 @@ def _rule_fusion(plan: P.PlanNode) -> List[Tuple[str, P.PlanNode]]:
         if kind is None or kind != _src_kind(below):
             continue
         same = (node.col == below.col and node.prompt == below.prompt
-                and node.max_new == below.max_new)
+                and node.max_new == below.max_new
+                and node.accuracy_budget == below.accuracy_budget)
         # the upper op must read the ORIGINAL column, not the lower
-        # op's freshly-written output
+        # op's freshly-written output.  Differing accuracy budgets must
+        # not fuse either: one fused pass has one cascade threshold,
+        # which would loosen the stricter constituent's contract.
         if not same or node.col in _outs(below):
             continue
         fused = P.LLMFused(input=below.child, col=node.col,
                            prompt=node.prompt,
                            outs=_outs(below) + _outs(node),
                            max_new=node.max_new, src_kind=kind,
-                           dedup=node.dedup or below.dedup)
+                           dedup=node.dedup or below.dedup,
+                           accuracy_budget=node.accuracy_budget)
         out.append((f"{P.describe(below)} + {P.describe(node)}",
                     P.rebuild(nodes[:i] + [fused])))
     return out

@@ -27,7 +27,7 @@ that point — and expects the executor to ``send`` back the output rows
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Union
+from typing import Callable, Dict, List, Optional, Union
 
 from repro.kernels.backend import resolve_backend
 from repro.olap import analysis as ANA
@@ -49,13 +49,19 @@ class PhysicalOp:
     """Static annotation of one LLM step (what EXPLAIN renders)."""
     node: P.PlanNode
     qsig: str
-    engine: str          # "optimized" | "base"
+    engine: str          # "optimized" | "base" | "cascade"
     backend: str         # resolved KernelBackend: "reference" | "pallas"
     placement: str       # "pool" | "private"
     prefix: str
     dedup: bool
     max_new: int
     est: OPT.NodeEst
+    # cascade annotations (engine == "cascade"): the effective per-op
+    # accuracy budget (node override, else the query-level default) and
+    # the planner's escalation prior — the fitted threshold replaces it
+    # at run time (core/calibrate.py fit_confidence_threshold)
+    accuracy_budget: Optional[float] = None
+    est_escalation: float = 1.0
 
 
 @dataclass
@@ -87,7 +93,9 @@ class ExecutableOp:
 
 def lower(logical: P.PlanNode, *, optimize_models: bool = True,
           pooled: bool = False, use_optimizer: bool = True,
-          verify: bool = True, backend: str = "auto") -> PhysicalPlan:
+          verify: bool = True, backend: str = "auto",
+          cascade_budget: Optional[float] = None,
+          cascade: str = "auto") -> PhysicalPlan:
     """plan -> verify -> optimize (each rewrite re-proved) -> verify ->
     physical steps.
 
@@ -97,7 +105,19 @@ def lower(logical: P.PlanNode, *, optimize_models: bool = True,
     data-dependent, ...) raises ``PlanVerificationError`` with stable
     ``PLAN0xx`` diagnostics *here*, instead of producing wrong rows
     from an engine later.
+
+    Cascades: an LLM node whose effective accuracy budget (its own
+    ``accuracy_budget``, else ``cascade_budget``) is positive may be
+    annotated ``engine="cascade"`` — every row runs the
+    instance-optimized proxy first and only low-confidence rows
+    re-submit to the base model.  ``cascade="auto"`` applies the cost
+    inequality ``est_escalation * base + proxy < base``
+    (olap/optimizer.py); ``"force"`` cascades every budgeted op;
+    ``"off"`` disables the strategy.  Requires ``optimize_models=True``
+    (the proxy IS the instance-optimized model).
     """
+    if cascade not in ("auto", "force", "off"):
+        raise ValueError(f"cascade must be auto/force/off, got {cascade!r}")
     P.validate(logical)
     if verify:
         pre = [d for d in ANA.verify_plan(logical)
@@ -132,11 +152,28 @@ def lower(logical: P.PlanNode, *, optimize_models: bool = True,
             steps.append(TableStep(node,
                                    lambda t, n=node: t.select(n.cols)))
         else:
+            budget = getattr(node, "accuracy_budget", None)
+            if budget is None:
+                budget = cascade_budget
+            node_engine, esc = engine, 1.0
+            # "force" cascades every budgeted op — including budget 0,
+            # where the threshold fits to inf and the op degenerates to
+            # base-only at run time (the exactness contract); "auto"
+            # only cascades when the cost inequality wins, which a
+            # zero budget never does
+            if (engine == "optimized" and cascade != "off"
+                    and budget is not None
+                    and (cascade == "force"
+                         or (budget > 0 and OPT.cascade_wins(budget)))):
+                node_engine = "cascade"
+                esc = OPT.predicted_escalation(budget)
             steps.append(PhysicalOp(
-                node=node, qsig=P.qsig(node), engine=engine,
+                node=node, qsig=P.qsig(node), engine=node_engine,
                 backend=kbackend, placement=placement, prefix=node.prompt,
                 dedup=getattr(node, "dedup", False),
-                max_new=node.max_new, est=est[id(node)]))
+                max_new=node.max_new, est=est[id(node)],
+                accuracy_budget=budget if node_engine == "cascade" else None,
+                est_escalation=esc))
     return PhysicalPlan(logical=logical, optimized=optimized, steps=steps,
                         firings=firings, est=est,
                         logical_cost=logical_cost,
@@ -175,9 +212,15 @@ def build_probe(node: P.PlanNode, t: Table, n_probe: int) -> List[str]:
     full column streams through the engine chunk-wise, never
     materialized as prompts here."""
     if isinstance(node, P.LLMJoin):
-        return [f"{node.prompt}{a} | {b}"
-                for a in t[node.on[0]][:32]
-                for b in node.right[node.on[1]][:2]]
+        # honor the caller's bound: ceil(n_probe/2) left values x 2
+        # right values, capped at n_probe total — the cascade threshold
+        # is fit on this probe, so a hardcoded slice would silently
+        # ignore a caller asking for a larger (or smaller) fit sample
+        n_left = max(1, -(-n_probe // 2))
+        out = [f"{node.prompt}{a} | {b}"
+               for a in t[node.on[0]][:n_left]
+               for b in node.right[node.on[1]][:2]]
+        return out[:n_probe]
     return [node.prompt + str(v) for v in t[node.col][:n_probe]]
 
 
@@ -192,7 +235,8 @@ def execute(pplan: PhysicalPlan, *, n_probe: int = 64):
         spec = build_spec(step.node, t)
         probe = build_probe(step.node, t, n_probe)
         outs = yield ExecutableOp(qsig=step.qsig, probe=probe, spec=spec,
-                                  optimize=step.engine == "optimized",
+                                  optimize=step.engine in ("optimized",
+                                                           "cascade"),
                                   op=step)
         t = spec.finish(outs)
     return t

@@ -28,6 +28,14 @@ Node zoo:
 optimizer's dedup rule: invoke the model once per *unique* input value
 and scatter outputs back to rows (greedy decode is deterministic per
 prompt, so outputs are byte-identical to the per-row path).
+
+``accuracy_budget`` on LLM nodes opts the op into the **model
+cascade** (olap/physical.py): the max fraction of rows that may be
+answered by the instance-optimized proxy *and* disagree with the base
+model.  ``None`` defers to the query-level default; ``0`` forces
+base-only behavior.  The budget is NOT part of ``qsig`` — the same
+proxy model serves every budget — and ``describe`` does not render it,
+so logical-plan snapshots are budget-independent.
 """
 from __future__ import annotations
 
@@ -87,6 +95,7 @@ class LLMMap(PlanNode):
     out_col: str
     max_new: int
     dedup: bool = False
+    accuracy_budget: Optional[float] = None
     kind = "map"
 
 
@@ -98,6 +107,7 @@ class LLMCorrect(PlanNode):
     out_col: Optional[str]
     max_new: int
     dedup: bool = False
+    accuracy_budget: Optional[float] = None
     kind = "correct"
 
     @property
@@ -113,6 +123,7 @@ class LLMFilter(PlanNode):
     max_new: int
     keep: Callable[[str], bool] = default_keep
     dedup: bool = False
+    accuracy_budget: Optional[float] = None
     kind = "llm_filter"
 
 
@@ -123,6 +134,7 @@ class LLMJoin(PlanNode):
     on: Tuple[str, str]
     prompt: str
     max_new: int
+    accuracy_budget: Optional[float] = None
     kind = "join"
 
 
@@ -142,6 +154,7 @@ class LLMFused(PlanNode):
     max_new: int
     src_kind: str = "map"
     dedup: bool = False
+    accuracy_budget: Optional[float] = None
     kind = "fused"
 
 

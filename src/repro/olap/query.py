@@ -22,6 +22,7 @@ instance-optimization is enabled, execution:
 from __future__ import annotations
 
 import hashlib
+import math
 import time
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -30,6 +31,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro.core.calibrate import CascadeCalibration, fit_confidence_threshold
 from repro.core.pipeline import InstanceOptimizer, Recipe
 from repro.core import policy as POL
 from repro.kernels.backend import normalize_backend
@@ -145,6 +147,11 @@ class IOLMSession:
         self.calib_rows = calib_rows
         self.eval_rows = eval_rows
         self.model_cache = ModelCache()
+        # fitted cascade thresholds, keyed (qsig, dsig, budget): the
+        # same proxy model serves every budget (budget is not in qsig),
+        # but each budget has its own acceptance threshold
+        self.cascade_cache: Dict[Tuple[str, str, float],
+                                 CascadeCalibration] = {}
         # KernelBackend for every engine this session builds (directly
         # or through its pool); an explicit engine_kw["backend"] wins
         self.backend = normalize_backend(backend)
@@ -178,6 +185,59 @@ class IOLMSession:
         m = self._optimize(qsig, prompts)
         return Engine(m.params, m.cfg, tokenizer=self.tok,
                       version=m.version, **self.engine_kw)
+
+    # -- cascade calibration --------------------------------------------
+    def _cascade(self, qsig: str, prompts: List[str], budget: float, *,
+                 max_new: int = 12) -> CascadeCalibration:
+        """Fit (and memoize) the cascade acceptance threshold for one
+        operator: run the held-out slice of the probe through BOTH the
+        instance-optimized proxy and the base model, score agreement,
+        and pick the smallest confidence threshold whose
+        accepted-but-disagreeing fraction stays within ``budget``
+        (core/calibrate.py).  Deterministic for a fixed probe: greedy
+        decode on both sides, and the fit is a pure function of the
+        (confidence, agreement) sample."""
+        dsig = ModelCache.data_signature(prompts)
+        key = (qsig, dsig, float(budget))
+        hit = self.cascade_cache.get(key)
+        if hit is not None:
+            return hit
+        if budget <= 0.0:
+            cal = fit_confidence_threshold([], [], 0.0)
+        else:
+            hold = (prompts[self.calib_rows:
+                            self.calib_rows + self.eval_rows]
+                    or prompts[: self.eval_rows])
+            proxy = self.optimized_engine(qsig, prompts)
+            if hasattr(proxy, "generate_stream"):
+                reqs = proxy.generate_stream(list(hold), max_new=max_new,
+                                             return_requests=True)
+                proxy_outs = [r.text for r in reqs]
+                confs = [r.confidence for r in reqs]
+            else:                       # fakes / remote backends
+                proxy_outs = proxy.generate(list(hold), max_new=max_new)
+                confs = [0.0] * len(proxy_outs)   # no signal: escalate
+            base_outs = OPS._invoke(self.base_engine(), list(hold),
+                                    max_new=max_new)
+            agree = [p == b for p, b in zip(proxy_outs, base_outs)]
+            cal = fit_confidence_threshold(confs, agree, budget)
+        self.cascade_cache[key] = cal
+        self.log.append(
+            f"[cascade] {qsig}: threshold={cal.threshold:.4f} "
+            f"est_escalation={cal.expected_escalation:.2f} "
+            f"(budget={budget:g}, {cal.n_fit} holdout rows)")
+        return cal
+
+    def cascade_threshold_for(self, qsig: str,
+                              budget: Optional[float]) -> Optional[float]:
+        """The fitted threshold for (qsig, budget) if any probe has been
+        calibrated yet, else None (EXPLAIN renders 'unfit')."""
+        if budget is None:
+            return None
+        for (q, _, b), cal in self.cascade_cache.items():
+            if q == qsig and b == float(budget):
+                return cal.threshold
+        return None
 
     # -- the instance-optimization workflow ------------------------------
     def _optimize(self, qsig: str, prompts: List[str]) -> OptimizedModel:
@@ -236,10 +296,17 @@ class OpRunStats:
     """Per-LLM-operator execution record from the last ``run()``.
     ``invocations`` counts prompts actually sent to the engine — with
     the optimizer's dedup/pushdown/fusion rules on, this is the number
-    the rules exist to shrink (benchmarks/optimizer.py measures it)."""
+    the rules exist to shrink (benchmarks/optimizer.py measures it).
+    For cascade ops, ``escalated`` is the subset of those rows that
+    re-submitted to the base model (benchmarks/cascade.py's
+    full-model-invocation metric) and ``threshold`` the fitted
+    acceptance cut."""
     kind: str
     qsig: str
     invocations: int
+    engine: str = ""
+    escalated: int = 0
+    threshold: Optional[float] = None
 
 
 class Query:
@@ -263,10 +330,17 @@ class Query:
     """
 
     def __init__(self, table: Table, session: IOLMSession, *,
-                 optimize: bool = True, optimize_plan: bool = True):
+                 optimize: bool = True, optimize_plan: bool = True,
+                 cascade_budget: Optional[float] = None,
+                 cascade: str = "auto"):
         self.session = session
         self.optimize = optimize
         self.optimize_plan = optimize_plan
+        # query-level cascade default: LLM ops without their own
+        # accuracy_budget inherit this; cascade= picks the planner mode
+        # ("auto" = cost inequality, "force", "off")
+        self.cascade_budget = cascade_budget
+        self.cascade = cascade
         self._root: PLAN.PlanNode = PLAN.Scan(table)
         self.last_run_stats: List[OpRunStats] = []
         # memoized lowering: (root, flags) -> PhysicalPlan, so
@@ -281,33 +355,41 @@ class Query:
 
     # -- builders -------------------------------------------------------
     def llm_map(self, col: str, *, prompt: str = PROMPTS["summarize"],
-                out_col: str = "summary", max_new: int = 24) -> "Query":
+                out_col: str = "summary", max_new: int = 24,
+                accuracy_budget: Optional[float] = None) -> "Query":
         self._root = PLAN.LLMMap(input=self._root, col=col, prompt=prompt,
-                                 out_col=out_col, max_new=max_new)
+                                 out_col=out_col, max_new=max_new,
+                                 accuracy_budget=accuracy_budget)
         return self
 
     def llm_correct(self, col: str, *, prompt: str = PROMPTS["correct"],
                     out_col: Optional[str] = None,
-                    max_new: int = 16) -> "Query":
+                    max_new: int = 16,
+                    accuracy_budget: Optional[float] = None) -> "Query":
         self._root = PLAN.LLMCorrect(input=self._root, col=col,
                                      prompt=prompt, out_col=out_col,
-                                     max_new=max_new)
+                                     max_new=max_new,
+                                     accuracy_budget=accuracy_budget)
         return self
 
     def llm_join(self, right: Table, on: Tuple[str, str], *,
-                 prompt: str = PROMPTS["join"], max_new: int = 12) -> "Query":
+                 prompt: str = PROMPTS["join"], max_new: int = 12,
+                 accuracy_budget: Optional[float] = None) -> "Query":
         self._root = PLAN.LLMJoin(input=self._root, right=right, on=on,
-                                  prompt=prompt, max_new=max_new)
+                                  prompt=prompt, max_new=max_new,
+                                  accuracy_budget=accuracy_budget)
         return self
 
     def llm_filter(self, col: str, *, prompt: str, max_new: int = 8,
-                   keep: Optional[Callable[[str], bool]] = None) -> "Query":
+                   keep: Optional[Callable[[str], bool]] = None,
+                   accuracy_budget: Optional[float] = None) -> "Query":
         """Semantic predicate: keep rows whose model output for
         ``prompt + value`` passes ``keep`` (default: affirmative
         prefix)."""
         self._root = PLAN.LLMFilter(input=self._root, col=col,
                                     prompt=prompt, max_new=max_new,
-                                    keep=keep or PLAN.default_keep)
+                                    keep=keep or PLAN.default_keep,
+                                    accuracy_budget=accuracy_budget)
         return self
 
     def filter(self, pred: Callable, *,
@@ -336,7 +418,8 @@ class Query:
         (builder calls reassign ``_root``, invalidating the key)."""
         backend = getattr(self.session, "backend", "auto")
         flags = (self.optimize, self.optimize_plan,
-                 self.session.pool is not None, backend)
+                 self.session.pool is not None, backend,
+                 self.cascade_budget, self.cascade)
         if (self._pplan is None or self._pplan_key is None
                 or self._pplan_key[0] is not self._root
                 or self._pplan_key[1] != flags):
@@ -344,7 +427,9 @@ class Query:
                 self._root, optimize_models=self.optimize,
                 pooled=self.session.pool is not None,
                 use_optimizer=self.optimize_plan,
-                backend=backend)
+                backend=backend,
+                cascade_budget=self.cascade_budget,
+                cascade=self.cascade)
             self._pplan_key = (self._root, flags)
         return self._pplan
 
@@ -399,13 +484,25 @@ class Query:
             if isinstance(step, PHYS.TableStep):
                 lines.append(f"  {i}. table {step.node.kind}")
             else:
-                lines.append(
+                line = (
                     f"  {i}. llm {step.node.kind} qsig={step.qsig} "
                     f"engine={step.engine} backend={step.backend} "
                     f"placement={step.placement} "
                     f"dedup={'on' if step.dedup else 'off'} "
                     f"est_calls={step.est.invocations} "
                     f"prefix={step.prefix!r}")
+                if step.engine == "cascade":
+                    # the fitted threshold appears once a probe has been
+                    # calibrated (run() / the scheduler fit it); before
+                    # that EXPLAIN shows the planner's escalation prior
+                    thr = self.session.cascade_threshold_for(
+                        step.qsig, step.accuracy_budget)
+                    line += (
+                        f" budget={step.accuracy_budget:g}"
+                        f" est_escalation={step.est_escalation:.2f}"
+                        f" threshold="
+                        + (f"{thr:.4f}" if thr is not None else "unfit"))
+                lines.append(line)
         ratio = (pplan.logical_cost / pplan.optimized_cost
                  if pplan.optimized_cost else 1.0)
         lines += ["",
@@ -447,6 +544,47 @@ class Query:
                 f"prefix, {saved} prefill tokens saved "
                 f"(v={engine.version})")
 
+    def _run_cascade(self, op) -> List[str]:
+        """One cascade op: every row through the instance-optimized
+        proxy, rows below the fitted confidence threshold re-submitted
+        to the base engine.  Escalated rows are answered by the same
+        greedy base decode a base-only run would use, so their outputs
+        are byte-identical; with an unsatisfiable budget (threshold =
+        inf) the proxy pass is skipped entirely and the op degenerates
+        to base-only."""
+        sess = self.session
+        spec = op.spec
+        budget = op.op.accuracy_budget or 0.0
+        cal = sess._cascade(op.qsig, op.probe, budget,
+                            max_new=spec.max_new)
+        prompts = list(spec.prompts)
+        if not math.isfinite(cal.threshold):
+            outs = OPS._invoke(sess.base_engine(), prompts,
+                               max_new=spec.max_new, prefix=spec.prefix)
+            self.last_run_stats.append(OpRunStats(
+                kind=spec.kind, qsig=op.qsig, invocations=len(outs),
+                engine="cascade", escalated=len(outs),
+                threshold=cal.threshold))
+            return outs
+        proxy = sess.optimized_engine(op.qsig, op.probe)
+        reqs = proxy.generate_stream(prompts, max_new=spec.max_new,
+                                     prefix=spec.prefix,
+                                     return_requests=True)
+        outs = [r.text for r in reqs]
+        reject = [i for i, r in enumerate(reqs)
+                  if r.confidence < cal.threshold]
+        if reject:
+            fixed = OPS._invoke(sess.base_engine(),
+                                [prompts[i] for i in reject],
+                                max_new=spec.max_new, prefix=spec.prefix)
+            for i, o in zip(reject, fixed):
+                outs[i] = o
+        self.last_run_stats.append(OpRunStats(
+            kind=spec.kind, qsig=op.qsig, invocations=len(prompts),
+            engine="cascade", escalated=len(reject),
+            threshold=cal.threshold))
+        return outs
+
     def run(self) -> Table:
         """Serial execution: drive the plan coroutine op by op through
         the session's engines (pooled when the session has a
@@ -459,6 +597,9 @@ class Query:
                 op = gen.send(send)
             except StopIteration as stop:
                 return stop.value
+            if op.op.engine == "cascade":
+                send = self._run_cascade(op)
+                continue
             engine = (self.session.optimized_engine(op.qsig, op.probe)
                       if op.optimize else self.session.base_engine())
             st = getattr(engine, "stats", None)
@@ -469,5 +610,5 @@ class Query:
                                prefix=spec.prefix)
             self.last_run_stats.append(
                 OpRunStats(kind=spec.kind, qsig=op.qsig,
-                           invocations=len(send)))
+                           invocations=len(send), engine=op.op.engine))
             self._log_prefix_savings(engine, spec.kind, hits0, saved0)

@@ -23,6 +23,12 @@ class Request:
     text: Optional[str] = None       # decoded output, set on completion
     truncated: bool = False          # prompt clipped to the top bucket
     follower: bool = False           # riding on an in-flight duplicate
+    # cascade acceptance signal: min answer-token probability over every
+    # emitted token (sampler.token_confidence), updated as the jitted
+    # decode step's confidence output lands.  inf until the first token
+    # (an empty output is "never doubted"); followers and result-cache
+    # hits inherit their leader's value.
+    confidence: float = float("inf")
     # prefix sharing: template token prefix split off at submit()
     prefix_ids: Optional[List[int]] = None
     prefix_key: Optional[tuple] = None   # PrefixCache key (ids, version)

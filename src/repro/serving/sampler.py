@@ -37,3 +37,21 @@ def sample(logits: jax.Array, key, *, temperature: float = 0.0,
         kth = vals[..., -1:]
         lf = jnp.where(lf < kth, -1e30, lf)
     return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+
+
+def token_confidence(logits: jax.Array, tok: jax.Array) -> jax.Array:
+    """Answer-token probability of the emitted token under the raw
+    (untempered) softmax: ``p = exp(logit[tok] - logsumexp(logits))``.
+
+    This is the cascade's acceptance signal (olap/README.md §Cascades):
+    it is computed from arrays already live inside the jitted decode
+    step — pure device math, no host callback — and calibrated against
+    an accuracy budget by ``core.calibrate.fit_confidence_threshold``.
+    ``logits`` is [..., vocab], ``tok`` the matching [...] int tokens;
+    returns f32 probabilities in [0, 1].
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    chosen = jnp.take_along_axis(lf, tok[..., None].astype(jnp.int32),
+                                 axis=-1)[..., 0]
+    return jnp.exp(chosen - lse)

@@ -618,12 +618,19 @@ class Scheduler:
         but operators of different tenants interleave tick-by-tick.
         Each ``Query._ops()`` generator yields optimizer-lowered
         ``ExecutableOp``s (olap/physical.py) carrying the per-op engine
-        choice (base vs instance-optimized recipe), probe sample,
-        prefix template, and the dedup-wrapped prompt stream.
-        Returns tenant -> result Table."""
+        choice (base vs instance-optimized recipe vs cascade), probe
+        sample, prefix template, and the dedup-wrapped prompt stream.
+        A cascade op runs as TWO submissions: every row through the
+        pooled proxy engine first, then the rows whose confidence fell
+        below the fitted threshold re-enter the scheduler as a base-
+        engine submission (proxy and base coexist under the one pool
+        budget); accepted and escalated outputs splice back in row
+        order before the plan advances.  Returns tenant -> result
+        Table."""
         gens = {t: q._ops() for t, q in queries.items()}
         results: Dict[str, Any] = {}
         current: Dict[str, Submission] = {}
+        cascading: Dict[str, Dict[str, Any]] = {}   # tenant -> phase state
 
         def advance(tenant: str, send_val) -> None:
             try:
@@ -631,10 +638,60 @@ class Scheduler:
             except StopIteration as stop:
                 results[tenant] = stop.value
                 return
+            if op.op.engine == "cascade":
+                budget = op.op.accuracy_budget or 0.0
+                cal = self.pool.session._cascade(
+                    op.qsig, op.probe, budget, max_new=op.spec.max_new)
+                prompts = list(op.spec.prompts)
+                if not np.isfinite(cal.threshold):
+                    # unsatisfiable budget: base-only, no proxy pass —
+                    # the exactness contract for accuracy_budget=0
+                    current[tenant] = self.submit(
+                        tenant, iter(prompts), qsig=op.qsig,
+                        probe=op.probe, max_new=op.spec.max_new,
+                        prefix=op.spec.prefix, optimize=False)
+                    return
+                cascading[tenant] = {"op": op, "cal": cal,
+                                     "prompts": prompts}
+                current[tenant] = self.submit(
+                    tenant, iter(prompts), qsig=op.qsig, probe=op.probe,
+                    max_new=op.spec.max_new, prefix=op.spec.prefix,
+                    optimize=True)
+                return
             current[tenant] = self.submit(
                 tenant, op.spec.prompts, qsig=op.qsig, probe=op.probe,
                 max_new=op.spec.max_new, prefix=op.spec.prefix,
                 optimize=op.optimize)
+
+        def collect(tenant: str, sub: Submission):
+            """Finished-submission hand-off: the op's output rows, or
+            None when a cascade just queued its escalation phase."""
+            state = cascading.get(tenant)
+            if state is None:
+                return sub.results()
+            if "rejects" not in state:      # proxy phase finished
+                outs = sub.results()
+                thr = state["cal"].threshold
+                rejects = [i for i, r in enumerate(sub.reqs)
+                           if r.confidence < thr]
+                if not rejects:
+                    del cascading[tenant]
+                    return outs
+                state["outs"] = outs
+                state["rejects"] = rejects
+                op = state["op"]
+                current[tenant] = self.submit(
+                    tenant,
+                    iter([state["prompts"][i] for i in rejects]),
+                    qsig=op.qsig, probe=op.probe,
+                    max_new=op.spec.max_new, prefix=op.spec.prefix,
+                    optimize=False)
+                return None
+            outs, rejects = state["outs"], state["rejects"]
+            for i, o in zip(rejects, sub.results()):
+                outs[i] = o
+            del cascading[tenant]
+            return outs
 
         t0 = time.time()
         for tenant in queries:
@@ -645,6 +702,8 @@ class Scheduler:
                 sub = current[tenant]
                 if sub.done:
                     del current[tenant]
-                    advance(tenant, sub.results())
+                    outs = collect(tenant, sub)
+                    if outs is not None:
+                        advance(tenant, outs)
         self.stats.wall_s += time.time() - t0
         return results

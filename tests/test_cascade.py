@@ -1,0 +1,440 @@
+"""Confidence-calibrated model cascades (ISSUE: cascades as a physical
+plan strategy) and the calibration-statistics bugfixes that back them.
+
+Covers the full stack: the pure threshold fit
+(``core.calibrate.fit_confidence_threshold``), the planner's
+engine="cascade" annotation + cost inequality (olap/physical.py,
+olap/optimizer.py), the serial executor's proxy->base escalation
+(``Query._run_cascade``), the pooled scheduler's two-phase cascade
+(``Scheduler.run_queries``), and the exactness contract: an
+accuracy budget of 0 — or any unsatisfiable budget (threshold = inf)
+— produces output byte-identical to a base-only run.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.calibrate import (CascadeCalibration, Recorder, WeightStats,
+                                  fit_confidence_threshold)
+from repro.core.pipeline import Recipe
+from repro.olap import optimizer as OPT
+from repro.olap import physical as PHYS
+from repro.olap import plan as PLAN
+from repro.olap.query import IOLMSession, Query
+from repro.olap.table import Table
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Scheduler
+
+W8 = Recipe(name="w8", wbits=8, quant_method="absmax")
+
+
+@pytest.fixture(scope="module")
+def tiny(tiny_dense):
+    return tiny_dense
+
+
+def make_session(tiny, **kw):
+    cfg, params = tiny
+    kw.setdefault("recipes", [W8])
+    kw.setdefault("calib_rows", 4)
+    kw.setdefault("eval_rows", 2)
+    kw.setdefault("engine_kw", dict(slots=2, max_len=64, buckets=(32,)))
+    return IOLMSession(params, cfg, **kw)
+
+
+VALS = ["pyton", "javascrpt", "golang", "rst", "kotln", "swft"]
+
+
+def cascade_query(sess, **kw):
+    kw.setdefault("cascade_budget", 0.5)
+    kw.setdefault("cascade", "force")
+    return Query(Table({"lang": list(VALS)}), sess, **kw) \
+        .llm_correct("lang", max_new=6)
+
+
+def base_only_outputs(tiny):
+    sess = make_session(tiny)
+    q = Query(Table({"lang": list(VALS)}), sess, optimize=False) \
+        .llm_correct("lang", max_new=6)
+    return q.run()["lang_fixed"]
+
+
+def proxy_only_outputs(tiny):
+    sess = make_session(tiny)
+    q = Query(Table({"lang": list(VALS)}), sess, cascade="off") \
+        .llm_correct("lang", max_new=6)
+    return q.run()["lang_fixed"]
+
+
+# ---------------------------------------------------------------------------
+# the threshold fit (core/calibrate.py)
+# ---------------------------------------------------------------------------
+
+class TestFitConfidenceThreshold:
+    def test_deterministic(self):
+        conf = [0.9, 0.1, 0.5, 0.7, 0.3]
+        agree = [True, False, True, True, False]
+        a = fit_confidence_threshold(conf, agree, 0.2)
+        b = fit_confidence_threshold(list(conf), list(agree), 0.2)
+        assert a == b                       # pure function of the sample
+
+    def test_budget_zero_escalates_everything(self):
+        cal = fit_confidence_threshold([0.9, 0.8], [True, True], 0.0)
+        assert math.isinf(cal.threshold)
+        assert cal.expected_escalation == 1.0
+
+    def test_empty_sample_escalates_everything(self):
+        cal = fit_confidence_threshold([], [], 0.5)
+        assert math.isinf(cal.threshold)
+        assert cal.expected_escalation == 1.0
+        assert cal.n_fit == 0
+
+    def test_picks_smallest_satisfying_threshold(self):
+        conf = [0.1, 0.2, 0.3, 0.4]
+        agree = [False, True, True, True]
+        # budget 0.25: 1 accepted-but-wrong row out of 4 is allowed, so
+        # the lowest confidence already satisfies the constraint
+        cal = fit_confidence_threshold(conf, agree, 0.25)
+        assert cal.threshold == pytest.approx(0.1)
+        assert cal.expected_escalation == 0.0
+        # budget 0.1: the disagreeing row must escalate -> the cut sits
+        # just above it, and exactly that one row escalates
+        cal = fit_confidence_threshold(conf, agree, 0.1)
+        assert cal.threshold == pytest.approx(0.2)
+        assert cal.expected_escalation == pytest.approx(0.25)
+
+    def test_unsatisfiable_budget_returns_inf(self):
+        cal = fit_confidence_threshold([0.9], [False], 0.5)
+        assert math.isinf(cal.threshold)
+        assert cal.expected_escalation == 1.0
+
+    def test_threshold_monotone_in_budget(self):
+        rng = np.random.RandomState(0)
+        conf = rng.rand(64)
+        agree = conf + rng.rand(64) * 0.5 > 0.6
+        thr = [fit_confidence_threshold(conf, agree, b).threshold
+               for b in (0.05, 0.1, 0.2, 0.4)]
+        # looser budget -> accept more -> threshold can only drop
+        assert all(a >= b for a, b in zip(thr, thr[1:]))
+
+
+# ---------------------------------------------------------------------------
+# calibration-statistics bugfixes
+# ---------------------------------------------------------------------------
+
+class TestRecorderBlockSim:
+    def test_block_sim_is_mean_over_visits(self):
+        """record_block over >=3 visits must average 1/n each.  The old
+        pairwise running average 0.5*(old+new) weighted the visits
+        (1/4, 1/4, 1/2) here, giving 0.75 instead of 2/3."""
+        rec = Recorder(hessian=False)
+        e1 = np.array([1.0, 0.0], np.float32)
+        e2 = np.array([0.0, 1.0], np.float32)
+        rec.record_block("blk", e1, e1)     # cos = 1
+        rec.record_block("blk", e1, e2)     # cos = 0
+        rec.record_block("blk", e1, e1)     # cos = 1
+        stats = rec.finish()
+        assert stats.block_sim["blk"] == pytest.approx(2.0 / 3.0, abs=1e-6)
+
+    def test_single_visit_unchanged(self):
+        rec = Recorder(hessian=False)
+        v = np.array([1.0, 2.0], np.float32)
+        rec.record_block("blk", v, v)
+        assert rec.finish().block_sim["blk"] == pytest.approx(1.0, abs=1e-6)
+
+
+class TestMergeNormPerExpert:
+    def test_stacked_experts_normalize_by_own_count(self):
+        """[E, d] sqnorm must divide by each expert's OWN row count;
+        the old global-count divide deflated rarely-routed experts."""
+        st = WeightStats(shape=(2, 2, 2), count=5,
+                         sqnorm=np.full((2, 2), 4.0, np.float32),
+                         count_e=np.array([4, 1], np.int64))
+        norms = st.merge_norm()
+        assert np.allclose(norms[0], 1.0)   # sqrt(4 / 4)
+        assert np.allclose(norms[1], 2.0)   # sqrt(4 / 1), NOT sqrt(4/5)
+
+    def test_dense_path_unchanged(self):
+        st = WeightStats(shape=(2, 2), count=4,
+                         sqnorm=np.full((2,), 16.0, np.float32))
+        assert np.allclose(st.merge_norm(), 2.0)
+
+    def test_on_matmul_accumulates_per_expert_counts(self):
+        rec = Recorder(hessian=False)
+        w = np.zeros((2, 3, 3), np.float32)         # stacked [E, d, d]
+        rec._id2path[id(w)] = "moe.w"
+        x = np.ones((2, 4, 3), np.float32)          # [E, C, d]
+        rec._on_matmul(w, x, valid=np.array([4, 1]))
+        rec._on_matmul(w, x, valid=np.array([2, 1]))
+        st = rec.stats["moe.w"]
+        assert st.count_e.tolist() == [6, 2]
+        assert st.count == 8
+        # all-ones rows: every expert's per-channel RMS is exactly 1
+        # when (and only when) each divides by its own row count
+        assert np.allclose(st.merge_norm(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# planner: engine="cascade" annotation + cost model (no engines needed)
+# ---------------------------------------------------------------------------
+
+def one_map_plan(budget=None):
+    t = Table({"v": ["alpha", "beta", "gamma"]})
+    return PLAN.LLMMap(input=PLAN.Scan(t), col="v", prompt="label: ",
+                       out_col="o", max_new=4, accuracy_budget=budget)
+
+
+def llm_op(pplan):
+    ops = pplan.llm_ops
+    assert len(ops) == 1
+    return ops[0]
+
+
+class TestPlannerCascade:
+    def test_auto_cascades_when_cost_model_wins(self):
+        op = llm_op(PHYS.lower(one_map_plan(), cascade_budget=0.2))
+        assert op.engine == "cascade"
+        assert op.accuracy_budget == 0.2
+        assert op.est_escalation == OPT.predicted_escalation(0.2) < 1.0
+
+    def test_no_budget_means_no_cascade(self):
+        op = llm_op(PHYS.lower(one_map_plan()))
+        assert op.engine == "optimized"
+        assert op.accuracy_budget is None
+        assert op.est_escalation == 1.0
+
+    def test_auto_declines_uneconomical_budget(self):
+        # budget 0.05 -> predicted escalation 1.0 -> cascade can't win
+        assert not OPT.cascade_wins(0.05)
+        op = llm_op(PHYS.lower(one_map_plan(), cascade_budget=0.05))
+        assert op.engine == "optimized"
+
+    def test_force_overrides_cost_model(self):
+        op = llm_op(PHYS.lower(one_map_plan(), cascade_budget=0.05,
+                               cascade="force"))
+        assert op.engine == "cascade"
+
+    def test_off_disables_cascade(self):
+        op = llm_op(PHYS.lower(one_map_plan(), cascade_budget=0.2,
+                               cascade="off"))
+        assert op.engine == "optimized"
+
+    def test_base_engine_never_cascades(self):
+        # the proxy IS the instance-optimized model; without it there
+        # is nothing to escalate FROM
+        op = llm_op(PHYS.lower(one_map_plan(), optimize_models=False,
+                               cascade_budget=0.2, cascade="force"))
+        assert op.engine == "base"
+
+    def test_node_budget_overrides_query_default(self):
+        op = llm_op(PHYS.lower(one_map_plan(budget=0.3),
+                               cascade_budget=0.1))
+        assert op.engine == "cascade"
+        assert op.accuracy_budget == 0.3
+
+    def test_auto_never_cascades_budget_zero(self):
+        # a zero budget predicts 100% escalation: the cost inequality
+        # can never pick the cascade
+        op = llm_op(PHYS.lower(one_map_plan(budget=0.0)))
+        assert op.engine == "optimized"
+
+    def test_force_cascades_budget_zero_for_exactness(self):
+        # under "force" a budget-0 op still lowers as a cascade — the
+        # threshold fits to inf and the op runs base-only (the
+        # exactness contract, exercised end-to-end in TestQueryCascade)
+        op = llm_op(PHYS.lower(one_map_plan(budget=0.0), cascade="force"))
+        assert op.engine == "cascade"
+        assert op.accuracy_budget == 0.0
+        assert op.est_escalation == 1.0
+
+    def test_invalid_mode_raises(self):
+        with pytest.raises(ValueError, match="cascade"):
+            PHYS.lower(one_map_plan(), cascade="always")
+
+    def test_cost_model_boundaries(self):
+        assert OPT.predicted_escalation(None) == 1.0
+        assert OPT.predicted_escalation(0.0) == 1.0
+        assert OPT.predicted_escalation(1e9) == pytest.approx(0.05)
+        assert OPT.cascade_wins(0.2)
+        assert not OPT.cascade_wins(None)
+
+
+class TestProbeHonorsBound:
+    def test_map_probe_bounded(self):
+        t = Table({"v": [f"x{i}" for i in range(10)]})
+        node = PLAN.LLMMap(input=PLAN.Scan(t), col="v", prompt="p: ",
+                           out_col="o", max_new=4)
+        assert len(PHYS.build_probe(node, t, 3)) == 3
+
+
+# ---------------------------------------------------------------------------
+# engine: the confidence signal the cascade thresholds on
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def conf_engine(tiny_dense):
+    cfg, params = tiny_dense
+    return Engine(params, cfg, slots=2, max_len=64, buckets=(32,))
+
+
+class TestEngineConfidence:
+    def test_finished_requests_carry_probability(self, conf_engine):
+        reqs = conf_engine.generate_stream(
+            ["alpha one", "beta two", "gamma three"], max_new=4,
+            return_requests=True)
+        for r in reqs:
+            # min over per-token answer probabilities: a probability
+            assert math.isfinite(r.confidence)
+            assert 0.0 < r.confidence <= 1.0
+
+    def test_follower_inherits_leader_confidence(self, conf_engine):
+        # identical prompts in one batch: the follower never decodes,
+        # it inherits the leader's text AND confidence at retire time
+        reqs = conf_engine.generate_stream(["dup prompt", "dup prompt"],
+                                           max_new=4, return_requests=True)
+        assert reqs[0].text == reqs[1].text
+        assert reqs[0].confidence == reqs[1].confidence
+
+    def test_result_cache_hit_preserves_confidence(self, conf_engine):
+        [first] = conf_engine.generate_stream(["cached row"], max_new=4,
+                                              return_requests=True)
+        hits0 = conf_engine.stats.cache_hits
+        [second] = conf_engine.generate_stream(["cached row"], max_new=4,
+                                               return_requests=True)
+        assert conf_engine.stats.cache_hits == hits0 + 1
+        assert second.text == first.text
+        assert second.confidence == first.confidence
+
+    def test_stats_expose_mean_confidence(self, tiny_dense):
+        cfg, params = tiny_dense
+        eng = Engine(params, cfg, slots=2, max_len=64, buckets=(32,))
+        eng.generate(["one", "two", "three"], max_new=4)
+        st = eng.stats
+        assert st.confidence_rows == 3
+        assert 0.0 < st.mean_confidence <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# serial executor: Query._run_cascade
+# ---------------------------------------------------------------------------
+
+def pin_threshold(monkeypatch, sess, threshold):
+    """Replace the fitted calibration with a fixed acceptance cut so
+    the escalation split is deterministic for byte-identity checks."""
+    cal = CascadeCalibration(threshold=threshold,
+                             expected_escalation=1.0,
+                             accuracy_budget=0.5, n_fit=0)
+    monkeypatch.setattr(sess, "_cascade",
+                        lambda qsig, prompts, budget, **kw: cal)
+
+
+class TestQueryCascade:
+    def test_unfit_threshold_degenerates_to_base_only(self, tiny,
+                                                      monkeypatch):
+        """threshold = inf (budget 0 / unsatisfiable): the proxy pass
+        is skipped and every row is answered by the same greedy base
+        decode a base-only run uses — byte-identical output."""
+        base = base_only_outputs(tiny)
+        sess = make_session(tiny)
+        pin_threshold(monkeypatch, sess, float("inf"))
+        q = cascade_query(sess)
+        out = q.run()["lang_fixed"]
+        assert out == base
+        (st,) = q.last_run_stats
+        assert st.engine == "cascade"
+        assert st.escalated == len(VALS)
+
+    def test_budget_zero_is_byte_identical_to_base_only(self, tiny):
+        """The exactness contract through the PUBLIC API, no patching:
+        accuracy budget 0 -> every row escalates -> output bytes equal
+        a base-only run's."""
+        base = base_only_outputs(tiny)
+        sess = make_session(tiny)
+        q = cascade_query(sess, cascade_budget=0.0)
+        out = q.run()["lang_fixed"]
+        assert out == base
+        (st,) = q.last_run_stats
+        assert st.engine == "cascade"
+        assert st.escalated == len(VALS)
+        assert math.isinf(st.threshold)
+
+    def test_accept_all_matches_proxy_only(self, tiny, monkeypatch):
+        proxy = proxy_only_outputs(tiny)
+        sess = make_session(tiny)
+        pin_threshold(monkeypatch, sess, 0.0)   # conf >= 0 always
+        q = cascade_query(sess)
+        out = q.run()["lang_fixed"]
+        assert out == proxy
+        (st,) = q.last_run_stats
+        assert st.escalated == 0
+
+    def test_every_row_is_proxy_or_base_answer(self, tiny):
+        """End-to-end with a REAL fitted threshold: each output row is
+        byte-identical to the proxy's answer (accepted) or the base
+        model's answer (escalated) — never a third thing."""
+        base = base_only_outputs(tiny)
+        proxy = proxy_only_outputs(tiny)
+        sess = make_session(tiny)
+        q = cascade_query(sess)
+        out = q.run()["lang_fixed"]
+        (st,) = q.last_run_stats
+        assert st.engine == "cascade"
+        assert st.threshold is not None
+        assert 0 <= st.escalated <= len(VALS)
+        for o, p, b in zip(out, proxy, base):
+            assert o in (p, b)
+            if o != p:                      # escalated row
+                assert o == b               # ... is byte-identical base
+        assert any("[cascade]" in line for line in sess.log)
+
+    def test_calibration_is_memoized(self, tiny):
+        sess = make_session(tiny)
+        prompts = [f"fix: categ{i}" for i in range(8)]
+        a = sess._cascade("q1", prompts, 0.5, max_new=4)
+        n_log = len(sess.log)
+        b = sess._cascade("q1", prompts, 0.5, max_new=4)
+        assert b is a
+        assert len(sess.log) == n_log       # no second fit logged
+        assert a.accuracy_budget == 0.5
+
+    def test_budget_zero_fit_is_degenerate(self, tiny):
+        sess = make_session(tiny)
+        cal = sess._cascade("q0", ["fix: a", "fix: b"], 0.0, max_new=4)
+        assert math.isinf(cal.threshold)
+        assert cal.expected_escalation == 1.0
+
+    def test_explain_renders_cascade_annotations(self, tiny):
+        sess = make_session(tiny)
+        q = cascade_query(sess, cascade_budget=0.2)
+        txt = q.explain()
+        assert "engine=cascade" in txt
+        assert "budget=0.2" in txt
+        assert "est_escalation=" in txt
+        assert "threshold=unfit" in txt     # nothing calibrated yet
+        q.run()
+        txt = q.explain()
+        assert "threshold=unfit" not in txt # the fitted cut now renders
+        assert "threshold=" in txt
+
+
+# ---------------------------------------------------------------------------
+# pooled scheduler: two-phase cascade submissions
+# ---------------------------------------------------------------------------
+
+class TestSchedulerCascade:
+    def test_run_queries_matches_serial_cascade(self, tiny):
+        pooled = make_session(tiny, pool_budget=64 * 1024 * 1024)
+        q = cascade_query(pooled)
+        res = Scheduler(pooled.pool, share=2).run_queries({"a": q})
+        serial = cascade_query(make_session(tiny))
+        assert res["a"]["lang_fixed"] == serial.run()["lang_fixed"]
+
+    def test_run_queries_unfit_threshold_is_base_only(self, tiny,
+                                                      monkeypatch):
+        base = base_only_outputs(tiny)
+        pooled = make_session(tiny, pool_budget=64 * 1024 * 1024)
+        pin_threshold(monkeypatch, pooled, float("inf"))
+        q = cascade_query(pooled)
+        res = Scheduler(pooled.pool, share=2).run_queries({"a": q})
+        assert res["a"]["lang_fixed"] == base

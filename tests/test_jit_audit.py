@@ -60,6 +60,19 @@ class TestCleanEngine:
         for name, fn in engine.jit_targets().items():
             assert not isinstance(fn, JA.JitCallRecorder), name
 
+    def test_confidence_emission_is_callback_free(self, audited):
+        """The cascade confidence (serving/sampler.token_confidence) is
+        computed inside the jitted decode/prefill steps from arrays
+        already live there; emitting it must introduce no host callback
+        (JIT001) and keep the donation rebinding intact (JIT003)."""
+        engine, report = audited
+        assert not any(d.code in ("JIT001", "JIT003")
+                       for d in report.diagnostics)
+        # and the signal actually reaches the finished requests
+        reqs = engine.generate_stream(["confidence probe"], max_new=4,
+                                      return_requests=True)
+        assert 0.0 < reqs[0].confidence <= 1.0
+
 
 class TestInjectedRegressions:
     def test_host_sync_in_decode_fires_JIT001(self, tiny_dense):

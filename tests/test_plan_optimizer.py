@@ -371,6 +371,23 @@ class TestPhysicalPlan:
             .select(["o"]).run()
         assert list(out.columns) == ["o"] and len(out) == 8
 
+    def test_join_probe_honors_n_probe(self):
+        """build_probe used to hardcode [:32] x [:2] for LLMJoin,
+        silently ignoring the caller's bound — the cascade threshold is
+        fit on this probe, so the requested sample size must be real."""
+        left = Table({"k": [f"l{i}" for i in range(40)]})
+        right = Table({"k": [f"r{i}" for i in range(8)]})
+        node = P.LLMJoin(input=P.Scan(left), right=right, on=("k", "k"),
+                         prompt="match: ", max_new=4)
+        probe = PHYS.build_probe(node, left, 4)
+        assert len(probe) == 4              # ceil(4/2)=2 left x 2 right
+        assert probe == ["match: l0 | r0", "match: l0 | r1",
+                         "match: l1 | r0", "match: l1 | r1"]
+        # a tiny bound still yields a non-empty sample
+        assert len(PHYS.build_probe(node, left, 1)) == 1
+        # the default bound reproduces the historical 32 x 2 sample
+        assert len(PHYS.build_probe(node, left, 64)) == 64
+
 
 EXPECTED_EXPLAIN = """\
 EXPLAIN (models: base, placement: private, plan optimizer: on, cost unit: rows x prompt_tokens)
