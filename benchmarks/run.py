@@ -35,6 +35,9 @@ SECTIONS = {
     "multi_tenant": ("benchmarks.multi_tenant",
                      "aggregate rows/s vs tenant count under a fixed "
                      "pool byte budget"),
+    "service": ("benchmarks.service",
+                "always-on HTTP service: rows/s over the socket path, "
+                "SLO shedding, warm restart with 0 recalibrations"),
     "device_parallel": ("benchmarks.device_parallel",
                         "the fleet across a (forced) 4-device mesh: 1 "
                         "vs 4 devices, TP base vs compressed replicas"),

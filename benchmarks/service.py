@@ -1,0 +1,183 @@
+"""Always-on service smoke benchmark: boot the HTTP service, drive a
+tenant mix through the real socket path, and hold the subsystem to its
+contracts end-to-end.
+
+  PYTHONPATH=src python benchmarks/service.py [--smoke] [--json PATH]
+
+One process plays both sides: ``serve(block=False)`` boots the
+ThreadingHTTPServer + pump thread, then a ``ServiceClient`` runs every
+tenant's plan over HTTP.  Measured/asserted per run:
+
+  rows/s        end-to-end HTTP-path throughput (admission + NDJSON
+                streaming included)
+  byte-identity every tenant's HTTP rows == a direct
+                ``Scheduler.run_queries`` pass over the same specs on
+                a fresh session
+  shedding      a tenant capped at 1 in-flight row is 429-shed, and
+                the verdict reaches the client
+  stats         per-tenant p50/p95/p99 latency present in ``/stats``
+  warm restart  checkpoint over HTTP, clean shutdown, restore into a
+                FRESH session: a previously seen query re-runs with
+                zero recalibrations and identical rows
+
+The JSON artifact embeds the final ``/stats`` payload — the CI
+``service-smoke`` job uploads it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+from types import SimpleNamespace
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import Csv, load_model
+from repro.core.compressed import param_bytes
+from repro.core.pipeline import Recipe
+from repro.olap.query import IOLMSession, Query, query_from_spec
+from repro.olap.table import Table
+from repro.serving.scheduler import Scheduler, slot_state_bytes
+from repro.service import (SemanticQueryService, ServiceClient, TenantSLO,
+                           restore_warm_state, serve)
+from repro.service.client import ShedError
+from repro.service.core import table_rows
+
+MAX_NEW = 6
+ENGINE_KW = dict(slots=4, max_len=128, buckets=(24, 96))
+RECIPES = [Recipe(name="w8", wbits=8, quant_method="absmax")]
+
+WORDS = ["pyton", "javascrpt", "golang", "rst", "kotln", "hskell",
+         "rubby", "scalla", "zigg", "fortrn", "cobal", "luaa"]
+
+
+def tenant_spec(i: int, n_rows: int) -> dict:
+    """One tenant's plan spec: per-tenant prompt template (distinct
+    qsig -> distinct compressed instance) over per-tenant data."""
+    builder_sess = SimpleNamespace(pool=None, backend="auto")
+    vals = [f"{WORDS[j % len(WORDS)]}{i}" for j in range(n_rows)]
+    return (Query(Table({"val": vals}), builder_sess)
+            .llm_correct("val", prompt=f"[tenant {i}] Fix the word: ",
+                         max_new=MAX_NEW)
+            .to_spec())
+
+
+def make_session(params, cfg, tok, budget) -> IOLMSession:
+    return IOLMSession(params, cfg, tokenizer=tok, recipes=RECIPES,
+                       calib_rows=4, eval_rows=2,
+                       engine_kw=dict(ENGINE_KW), pool_budget=budget)
+
+
+def main(csv: Csv | None = None, *, smoke: bool = False,
+         json_path: str | None = None) -> dict:
+    csv = csv or Csv()
+    cfg, params, tok = load_model()
+    n_tenants = 2 if smoke else 4
+    n_rows = 4 if smoke else 10
+    base_entry = (param_bytes(params)
+                  + ENGINE_KW["slots"] * slot_state_bytes(
+                      cfg, ENGINE_KW["max_len"]))
+    budget = int(3 * base_entry)
+    specs = {f"t{i}": tenant_spec(i, n_rows) for i in range(n_tenants)}
+
+    print(f"\n=== Semantic query service ({n_tenants} tenants x "
+          f"{n_rows} rows over HTTP, budget {budget / 1e6:.1f} MB) ===")
+    sess = make_session(params, cfg, tok, budget)
+    svc = SemanticQueryService(
+        sess,
+        slos={"capped": TenantSLO(max_inflight_rows=1, max_queries=2)},
+        default_slo=TenantSLO(max_inflight_rows=512, max_queries=16))
+    server, thread = serve(svc, port=0, block=False)
+    host, port = server.server_address[:2]
+    client = ServiceClient(host, port)
+    print(f"[service] listening on {host}:{port}")
+
+    t0 = time.time()
+    rows_by_tenant = {t: client.query(t, spec)
+                      for t, spec in specs.items()}
+    dt = time.time() - t0
+    total_rows = sum(len(r) for r in rows_by_tenant.values())
+    assert total_rows == n_tenants * n_rows
+    rows_per_s = total_rows / dt
+    print(f"[service] {total_rows} rows over HTTP in {dt:.2f}s "
+          f"({rows_per_s:.2f} rows/s)")
+    csv.add("service/http", 1e6 * dt / total_rows,
+            f"tenants={n_tenants};rows_per_s={rows_per_s:.2f}")
+
+    # --- byte-identity vs the library path ----------------------------
+    ref = make_session(params, cfg, tok, budget)
+    res = Scheduler(ref.pool, share=4).run_queries(
+        {t: query_from_spec(s, ref) for t, s in specs.items()})
+    for t in specs:
+        assert rows_by_tenant[t] == table_rows(res[t]), \
+            f"{t}: HTTP rows diverge from Scheduler.run_queries"
+    print("[service] HTTP rows byte-identical to Scheduler.run_queries")
+
+    # --- SLO shedding --------------------------------------------------
+    shed_seen = False
+    try:
+        ServiceClient(host, port, max_retries=0).query(
+            "capped", specs["t0"])
+    except ShedError as e:
+        shed_seen = True
+        print(f"[service] capped tenant shed as expected: "
+              f"{e.verdict['reason']}")
+    assert shed_seen, "capped tenant was not shed"
+
+    # --- stats ---------------------------------------------------------
+    stats = client.stats()
+    for t in specs:
+        lat = stats["scheduler"]["tenants"][t]["latency"]
+        assert lat["p50"] is not None \
+            and lat["p50"] <= lat["p95"] <= lat["p99"]
+    assert stats["admission"]["capped"]["shed"] >= 1
+    print(f"[service] /stats ok: queries={stats['service']['queries']} "
+          f"shed={stats['service']['shed']} "
+          f"recalibrations={stats['session']['recalibrations']}")
+
+    # --- warm restart --------------------------------------------------
+    ckpt = os.path.join(tempfile.mkdtemp(prefix="iolm_service_"), "warm")
+    client.checkpoint(ckpt)
+    client.shutdown()
+    thread.join(timeout=10)
+    server.server_close()
+    svc.stop()
+    warm = make_session(params, cfg, tok, budget)
+    restore_warm_state(warm, ckpt)
+    t1 = time.time()
+    rows_again = table_rows(query_from_spec(specs["t0"], warm).run())
+    warm_dt = time.time() - t1
+    assert warm.recalibrations == 0, \
+        f"warm restart recalibrated {warm.recalibrations}x"
+    assert warm.cascade_fits == 0
+    assert rows_again == rows_by_tenant["t0"]
+    print(f"[service] warm restart: seen query re-answered in "
+          f"{warm_dt:.2f}s with 0 recalibrations")
+    csv.add("service/warm_restart", 1e6 * warm_dt / n_rows,
+            "recalibrations=0")
+
+    result = {
+        "smoke": smoke, "tenants": n_tenants, "rows_per_tenant": n_rows,
+        "rows_per_s": rows_per_s, "shed_seen": shed_seen,
+        "warm_restart_s": warm_dt, "warm_recalibrations": 0,
+        "stats": stats, "csv": csv.lines,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"[service] wrote {json_path}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (2 tenants, 4 rows)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results (incl. /stats payload) as JSON")
+    args = ap.parse_args()
+    main(smoke=args.smoke, json_path=args.json)

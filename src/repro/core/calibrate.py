@@ -189,6 +189,23 @@ class CascadeCalibration:
     accuracy_budget: float
     n_fit: int
 
+    # warm-restart serialization (service/checkpoint.py).  ``inf``
+    # thresholds survive the trip: json emits the literal Infinity,
+    # which Python's json reader parses back to float('inf').
+    def to_dict(self) -> dict:
+        return {"threshold": self.threshold,
+                "expected_escalation": self.expected_escalation,
+                "accuracy_budget": self.accuracy_budget,
+                "n_fit": self.n_fit}
+
+    @staticmethod
+    def from_dict(d: dict) -> "CascadeCalibration":
+        return CascadeCalibration(
+            threshold=float(d["threshold"]),
+            expected_escalation=float(d["expected_escalation"]),
+            accuracy_budget=float(d["accuracy_budget"]),
+            n_fit=int(d["n_fit"]))
+
 
 def fit_confidence_threshold(confidences, agreements,
                              accuracy_budget: float) -> CascadeCalibration:

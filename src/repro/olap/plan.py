@@ -51,6 +51,52 @@ def default_keep(out: str) -> bool:
     return out.strip().lower().startswith(("yes", "keep", "same", "true"))
 
 
+_PRED_OPS: dict = {
+    "eq": lambda a, b: a == b,
+    "ne": lambda a, b: a != b,
+    "lt": lambda a, b: a < b,
+    "le": lambda a, b: a <= b,
+    "gt": lambda a, b: a > b,
+    "ge": lambda a, b: a >= b,
+    "contains": lambda a, b: str(b) in str(a),
+    "prefix": lambda a, b: str(a).startswith(str(b)),
+}
+
+
+@dataclass(frozen=True)
+class ColumnPredicate:
+    """A serializable single-column comparison for ``Filter`` nodes.
+
+    Opaque Python callables cannot cross a process boundary, so query
+    plans shipped to the service as JSON (query.Query.to_spec) express
+    non-LLM filters with this declarative form instead: ``col <op>
+    value`` where ``op`` is one of eq/ne/lt/le/gt/ge/contains/prefix.
+    It is itself a callable row predicate, so the rest of the stack
+    (Table.filter, the optimizer's pushdown rule) treats it exactly
+    like a lambda — with the bonus that its read set is known, so the
+    builder auto-declares ``columns={col}``.
+    """
+    col: str
+    op: str
+    value: object
+
+    def __post_init__(self):
+        if self.op not in _PRED_OPS:
+            raise ValueError(
+                f"unknown predicate op {self.op!r}; "
+                f"expected one of {sorted(_PRED_OPS)}")
+
+    def __call__(self, row: dict) -> bool:
+        return bool(_PRED_OPS[self.op](row[self.col], self.value))
+
+    def to_dict(self) -> dict:
+        return {"col": self.col, "op": self.op, "value": self.value}
+
+    @staticmethod
+    def from_dict(d: dict) -> "ColumnPredicate":
+        return ColumnPredicate(col=d["col"], op=d["op"], value=d["value"])
+
+
 @dataclass(frozen=True)
 class PlanNode:
     """Base class; every concrete node is a frozen dataclass."""

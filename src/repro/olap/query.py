@@ -157,6 +157,11 @@ class IOLMSession:
         self.backend = normalize_backend(backend)
         self.engine_kw = dict(engine_kw or {})
         self.engine_kw.setdefault("backend", self.backend)
+        # pipeline counters for the warm-restart contract (service/
+        # checkpoint.py): a restored session must answer previously
+        # seen (qsig, dsig) work with both counters unchanged
+        self.recalibrations = 0       # full InstanceOptimizer runs
+        self.cascade_fits = 0         # cascade threshold fits
         self.log: List[str] = []
         self.pool = pool
         if pool is not None and (devices is not None or mesh is not None):
@@ -202,6 +207,7 @@ class IOLMSession:
         hit = self.cascade_cache.get(key)
         if hit is not None:
             return hit
+        self.cascade_fits += 1
         if budget <= 0.0:
             cal = fit_confidence_threshold([], [], 0.0)
         else:
@@ -246,6 +252,7 @@ class IOLMSession:
         if cached is not None:
             self.log.append(f"[iolm] model cache hit for {qsig}")
             return cached
+        self.recalibrations += 1
         t0 = time.time()
         sample = prompts[: self.calib_rows]
         toks, _ = self.tok.pad_batch(
@@ -612,3 +619,115 @@ class Query:
                 OpRunStats(kind=spec.kind, qsig=op.qsig,
                            invocations=len(send), engine=op.op.engine))
             self._log_prefix_savings(engine, spec.kind, hits0, saved0)
+
+    # -- JSON round-trip ------------------------------------------------
+    def to_spec(self) -> Dict[str, Any]:
+        """The query as a JSON-serializable spec dict — the wire format
+        of the always-on service (repro/service): inline table data,
+        one entry per plan node (scan-first order), plus the query-
+        level routing flags.  ``query_from_spec(spec, session)``
+        rebuilds an equivalent ``Query``; the round-trip is exact for
+        every builder surface except opaque Python callables —
+        ``filter()`` predicates must be ``PLAN.ColumnPredicate`` and
+        ``llm_filter`` must use the default ``keep`` parser.  Raises
+        ``ValueError`` on a non-serializable plan (an opaque callable,
+        or an optimizer-annotated node that only the rewriter emits).
+        """
+        nodes = PLAN.chain(self._root)[::-1]        # scan first
+        scan = nodes[0]
+        ops: List[Dict[str, Any]] = []
+        for n in nodes[1:]:
+            if n.kind == "map":
+                ops.append({"op": "llm_map", "col": n.col,
+                            "prompt": n.prompt, "out_col": n.out_col,
+                            "max_new": n.max_new,
+                            "accuracy_budget": n.accuracy_budget})
+            elif n.kind == "correct":
+                ops.append({"op": "llm_correct", "col": n.col,
+                            "prompt": n.prompt, "out_col": n.out_col,
+                            "max_new": n.max_new,
+                            "accuracy_budget": n.accuracy_budget})
+            elif n.kind == "llm_filter":
+                if n.keep is not PLAN.default_keep:
+                    raise ValueError(
+                        "to_spec: llm_filter with a custom keep= "
+                        "callable is not JSON-serializable")
+                ops.append({"op": "llm_filter", "col": n.col,
+                            "prompt": n.prompt, "max_new": n.max_new,
+                            "accuracy_budget": n.accuracy_budget})
+            elif n.kind == "join":
+                ops.append({"op": "llm_join",
+                            "right": dict(n.right.columns),
+                            "on": list(n.on), "prompt": n.prompt,
+                            "max_new": n.max_new,
+                            "accuracy_budget": n.accuracy_budget})
+            elif n.kind == "filter":
+                if not isinstance(n.pred, PLAN.ColumnPredicate):
+                    raise ValueError(
+                        "to_spec: filter() with an opaque callable is "
+                        "not JSON-serializable — use "
+                        "plan.ColumnPredicate")
+                ops.append({"op": "filter",
+                            "pred": n.pred.to_dict()})
+            elif n.kind == "select":
+                ops.append({"op": "select", "cols": list(n.cols)})
+            else:
+                raise ValueError(
+                    f"to_spec: node kind {n.kind!r} has no wire form "
+                    "(optimizer-annotated plans are not serializable; "
+                    "serialize the builder-level plan)")
+        return {"version": 1,
+                "table": {"columns": dict(scan.table.columns)},
+                "ops": ops,
+                "optimize": self.optimize,
+                "optimize_plan": self.optimize_plan,
+                "cascade_budget": self.cascade_budget,
+                "cascade": self.cascade}
+
+
+def query_from_spec(spec: Dict[str, Any],
+                    session: IOLMSession) -> Query:
+    """Rebuild a ``Query`` from its ``to_spec()`` wire form (the
+    service's request body).  Strict: unknown spec versions, op names,
+    or missing fields raise ``ValueError``/``KeyError`` so a malformed
+    request fails at admission, not mid-plan."""
+    if spec.get("version") != 1:
+        raise ValueError(
+            f"unsupported query spec version {spec.get('version')!r}")
+    table = Table({k: list(v)
+                   for k, v in spec["table"]["columns"].items()})
+    q = Query(table, session,
+              optimize=bool(spec.get("optimize", True)),
+              optimize_plan=bool(spec.get("optimize_plan", True)),
+              cascade_budget=spec.get("cascade_budget"),
+              cascade=spec.get("cascade", "auto"))
+    for o in spec.get("ops", []):
+        kind = o.get("op")
+        if kind == "llm_map":
+            q.llm_map(o["col"], prompt=o["prompt"],
+                      out_col=o.get("out_col", "summary"),
+                      max_new=int(o.get("max_new", 24)),
+                      accuracy_budget=o.get("accuracy_budget"))
+        elif kind == "llm_correct":
+            q.llm_correct(o["col"], prompt=o["prompt"],
+                          out_col=o.get("out_col"),
+                          max_new=int(o.get("max_new", 16)),
+                          accuracy_budget=o.get("accuracy_budget"))
+        elif kind == "llm_filter":
+            q.llm_filter(o["col"], prompt=o["prompt"],
+                         max_new=int(o.get("max_new", 8)),
+                         accuracy_budget=o.get("accuracy_budget"))
+        elif kind == "llm_join":
+            q.llm_join(Table({k: list(v)
+                              for k, v in o["right"].items()}),
+                       tuple(o["on"]), prompt=o["prompt"],
+                       max_new=int(o.get("max_new", 12)),
+                       accuracy_budget=o.get("accuracy_budget"))
+        elif kind == "filter":
+            pred = PLAN.ColumnPredicate.from_dict(o["pred"])
+            q.filter(pred, columns=(pred.col,))
+        elif kind == "select":
+            q.select(o["cols"])
+        else:
+            raise ValueError(f"unknown query spec op {kind!r}")
+    return q

@@ -1,0 +1,29 @@
+"""Always-on semantic query service over the IOLM-DB serving spine.
+
+The paper's "millions of users" framing (PAPER.md §1) only holds for a
+long-running service, not a script that drives the library once.  This
+package is that service: a stdlib-only HTTP front-end
+(:mod:`repro.service.server`) over a single pump thread
+(:mod:`repro.service.core`) that drives the fair-share ``Scheduler``
+tick loop, per-tenant SLO admission control with 429-style shedding
+(:mod:`repro.service.slo`), a retrying client
+(:mod:`repro.service.client`), and warm restart of the session's
+instance-optimization state (:mod:`repro.service.checkpoint`).
+
+See src/repro/service/README.md for the architecture walk-through.
+"""
+from repro.service.client import ServiceClient
+from repro.service.core import SemanticQueryService
+from repro.service.checkpoint import restore_warm_state, save_warm_state
+from repro.service.server import serve
+from repro.service.slo import AdmissionController, TenantSLO
+
+__all__ = [
+    "AdmissionController",
+    "SemanticQueryService",
+    "ServiceClient",
+    "TenantSLO",
+    "restore_warm_state",
+    "save_warm_state",
+    "serve",
+]

@@ -1,0 +1,130 @@
+"""Warm restart: checkpoint/restore of a session's optimization state.
+
+The expensive part of IOLM-DB is not serving — it is the per-(qsig,
+dsig) instance-optimization search (calibration + recipe search) and
+the cascade threshold fits.  A service restart that loses them pays
+the whole bill again on the first query.  ``save_warm_state`` persists
+the three pieces that make a restart *warm*:
+
+  1. the **ModelCache**: every compressed model's params (via
+     ``training/checkpoint.py``'s atomic array writer — one
+     self-validating checkpoint per model under ``models/m<i>/``),
+     its ``ModelConfig`` and winning ``Recipe``;
+  2. the **cascade_cache**: fitted acceptance thresholds per
+     (qsig, dsig, budget) — plain JSON (``inf`` thresholds round-trip
+     through Python json's ``Infinity`` literal);
+  3. the **pool-residency manifest**: which model versions were
+     engine-resident at save time, so a restart can rebuild the same
+     working set eagerly instead of on first request.
+
+The top-level ``service_state.json`` manifest is written LAST with
+``atomic_write_json``, so a crash mid-save leaves the previous state
+readable: restore only trusts models the manifest lists.
+
+``restore_warm_state`` rebuilds the caches in a fresh process — array
+state through ``restore_tree`` (no pytree template needed: this
+process never built these models) — and pre-admits previously
+resident engines.  The contract (regression-tested in
+tests/test_service.py): a restored session answers a previously seen
+(qsig, dsig) query with ``session.recalibrations == 0`` and
+``session.cascade_fits == 0``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict
+
+from repro.core.calibrate import CascadeCalibration
+from repro.core.pipeline import Recipe
+from repro.configs.base import ModelConfig
+from repro.olap.query import IOLMSession, OptimizedModel
+from repro.training import checkpoint as CKPT
+
+MANIFEST = "service_state.json"
+
+
+def save_warm_state(session: IOLMSession, ckpt_dir: str) -> str:
+    """Persist model cache + cascade thresholds + pool residency."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    models = []
+    for i, ((qsig, dsig), m) in enumerate(session.model_cache._d.items()):
+        entry: Dict[str, Any] = {
+            "qsig": qsig, "dsig": dsig, "version": m.version,
+            "recipe": dataclasses.asdict(m.recipe),
+            # identity picks (nothing survived the search) carry the
+            # session's own base params — never re-serialized
+            "identity": m.params is session.params,
+        }
+        if not entry["identity"]:
+            mdir = os.path.join("models", f"m{i}")
+            CKPT.save(os.path.join(ckpt_dir, mdir), 0, m.params,
+                      extra={"cfg": dataclasses.asdict(m.cfg)}, keep=1)
+            entry["dir"] = mdir
+        models.append(entry)
+    cascades = [{"qsig": q, "dsig": d, "budget": b,
+                 "cal": cal.to_dict()}
+                for (q, d, b), cal in session.cascade_cache.items()]
+    residency = (session.pool.resident_versions
+                 if session.pool is not None else [])
+    CKPT.atomic_write_json(
+        os.path.join(ckpt_dir, MANIFEST),
+        {"version": 1, "models": models, "cascades": cascades,
+         "residency": residency})
+    return ckpt_dir
+
+
+def _recipe_from_dict(d: Dict[str, Any]) -> Recipe:
+    d = dict(d)
+    d["nm"] = tuple(d.get("nm", (0, 0)))
+    return Recipe(**d)
+
+
+def restore_warm_state(session: IOLMSession, ckpt_dir: str, *,
+                       prewarm: bool = True) -> Dict[str, Any]:
+    """Load warm state into ``session``; returns the manifest.
+
+    ``prewarm=True`` additionally re-admits engines for the model
+    versions that were pool-resident at save time (best effort: a
+    smaller pool budget on the restarted host simply ends up with a
+    smaller working set, never an error)."""
+    with open(os.path.join(ckpt_dir, MANIFEST)) as f:
+        manifest = json.load(f)
+    if manifest.get("version") != 1:
+        raise ValueError(
+            f"unsupported warm-state version {manifest.get('version')!r}")
+    by_version: Dict[str, OptimizedModel] = {}
+    for entry in manifest["models"]:
+        if entry["identity"]:
+            m = OptimizedModel(session.params, session.cfg, None,
+                               _recipe_from_dict(entry["recipe"]),
+                               entry["version"])
+        else:
+            params, _, extra = CKPT.restore_tree(
+                os.path.join(ckpt_dir, entry["dir"]))
+            m = OptimizedModel(params, ModelConfig(**extra["cfg"]), None,
+                               _recipe_from_dict(entry["recipe"]),
+                               entry["version"])
+        session.model_cache.put(entry["qsig"], entry["dsig"], m)
+        by_version[m.version] = m
+    for c in manifest["cascades"]:
+        session.cascade_cache[(c["qsig"], c["dsig"],
+                               float(c["budget"]))] = \
+            CascadeCalibration.from_dict(c["cal"])
+    if prewarm and session.pool is not None:
+        for version in manifest["residency"]:
+            try:
+                if version == "base":
+                    session.pool.engine_for("base", optimize=False)
+                elif version in by_version:
+                    session.pool.admit(by_version[version])
+            except Exception:
+                # best effort: budget/device mismatches on the new
+                # host shrink the prewarmed set, nothing more
+                session.log.append(
+                    f"[warm] could not pre-admit {version}")
+    session.log.append(
+        f"[warm] restored {len(manifest['models'])} models, "
+        f"{len(manifest['cascades'])} cascade fits from {ckpt_dir}")
+    return manifest

@@ -32,6 +32,9 @@ class Request:
     # prefix sharing: template token prefix split off at submit()
     prefix_ids: Optional[List[int]] = None
     prefix_key: Optional[tuple] = None   # PrefixCache key (ids, version)
+    # original prompt text, kept so a scheduler can re-submit the row to
+    # a replacement engine after a mid-tick engine fault (quarantine)
+    src: Optional[str] = None
 
 
 def bucket_len(n: int, buckets: Sequence[int]) -> int:

@@ -482,7 +482,8 @@ class Engine:
         pass their prompt template): rows sharing it are prefilled from
         one cached prefix state and bucketed on their suffix only."""
         prefix_ids, ids, pkey = self._split_prefix(text, prefix)
-        req = Request(rid=self._rid, prompt_ids=ids, max_new=max_new)
+        req = Request(rid=self._rid, prompt_ids=ids, max_new=max_new,
+                      src=text)
         if prefix_ids is not None:
             req.prefix_ids = prefix_ids
             req.prefix_key = pkey

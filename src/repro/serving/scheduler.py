@@ -74,8 +74,10 @@ import numpy as np
 
 from repro.core.compressed import param_bytes
 from repro.models import api
+from repro.serving.batcher import Request
 from repro.serving.cache import PrefixCache
 from repro.serving.engine import Engine
+from repro.serving.metrics import TenantStats
 
 
 def slot_state_bytes(cfg, max_len: int) -> int:
@@ -257,6 +259,23 @@ class ModelPool:
     def pinned(self, version: str) -> bool:
         return self._pins.get(version, 0) > 0
 
+    def discard(self, version: str, *, engine=None) -> bool:
+        """Forcibly drop a resident entry (fault quarantine).  Unlike
+        LRU eviction this removes the entry even when pinned — the pins
+        belong to the submissions being quarantined off the faulty
+        engine, and the scheduler clears them by discarding here — so
+        the replacement admission has room.  ``engine`` (when given)
+        guards against discarding an innocent rebuild that re-used the
+        same version string after the fault."""
+        e = self._entries.get(version)
+        if e is None or (engine is not None and e.engine is not engine):
+            return False
+        del self._entries[version]
+        self._pins.pop(version, None)
+        self.stats.evictions += 1
+        self.eviction_log.append(version)
+        return True
+
     def resolve(self, qsig: str, probe: Iterable[str] = (), *,
                 optimize: bool = True):
         """The query's model (optimizing on first sight), WITHOUT
@@ -420,6 +439,15 @@ class Submission:
     peak_inflight: int = 0
     first_done_tick: Optional[int] = None
     last_done_tick: Optional[int] = None
+    # per-submission in-flight cap (a tenant SLO): effective share is
+    # min(scheduler share, this) when set
+    share: Optional[int] = None
+    # fault quarantine: how many engines this submission has been
+    # evacuated from (bounded by Scheduler.max_retries)
+    retries: int = 0
+    # latency instrumentation (metrics.py reservoirs)
+    submit_t: float = 0.0
+    activated_t: Optional[float] = None
 
     @property
     def active(self) -> bool:
@@ -448,10 +476,35 @@ class SchedulerStats:
     # device fan-out: how many distinct devices had an in-flight decode
     # step dispatched in the same tick (1 on a single-device pool)
     peak_concurrent_devices: int = 1
+    # graceful degradation: submissions quarantined off a faulted
+    # engine (each retried on the pooled base engine until
+    # ``max_retries`` is spent), with one event record apiece
+    degradations: int = 0
+    events: List[Dict[str, Any]] = field(default_factory=list)
+    # per-tenant streaming histograms (serving/metrics.py): queue-wait
+    # and per-row latency reservoirs + row/degradation counters
+    tenants: Dict[str, TenantStats] = field(default_factory=dict)
 
     @property
     def rows_per_s(self) -> float:
         return self.rows / self.wall_s if self.wall_s else 0.0
+
+    def tenant(self, name: str) -> TenantStats:
+        ts = self.tenants.get(name)
+        if ts is None:
+            ts = self.tenants[name] = TenantStats()
+        return ts
+
+    def as_dict(self) -> Dict[str, Any]:
+        """JSON-ready snapshot (the ``/stats`` endpoint's scheduler
+        section; p50/p95/p99 come from the per-tenant reservoirs)."""
+        return {"ticks": self.ticks, "rows": self.rows,
+                "wall_s": self.wall_s, "rows_per_s": self.rows_per_s,
+                "peak_concurrent_devices": self.peak_concurrent_devices,
+                "degradations": self.degradations,
+                "events": list(self.events),
+                "tenants": {t: ts.as_dict()
+                            for t, ts in self.tenants.items()}}
 
 
 class Scheduler:
@@ -466,27 +519,36 @@ class Scheduler:
     free too.
     """
 
-    def __init__(self, pool: ModelPool, *, share: int = 8):
+    def __init__(self, pool: ModelPool, *, share: int = 8,
+                 max_retries: int = 2):
         self.pool = pool
         self.share = max(1, share)
+        # fault quarantine: how many engine evacuations one submission
+        # may survive before its error turns terminal
+        self.max_retries = max(0, max_retries)
         self.pending: "deque[Submission]" = deque()
         self.active: List[Submission] = []
         self.finished: List[Submission] = []
         self.stats = SchedulerStats()
         self.trace: List[Tuple[int, str]] = []   # (tick, tenant) per row
         self._owners: Dict[Tuple[int, int], Submission] = {}
+        self._t0: Dict[Tuple[int, int], float] = {}   # row submit times
         self._rr = 0
 
     # -- submission -----------------------------------------------------
     def submit(self, tenant: str, prompts: Iterable[str], *, qsig: str,
                probe: Optional[Iterable[str]] = None, max_new: int = 16,
                prefix: Optional[str] = None,
-               optimize: bool = True) -> Submission:
+               optimize: bool = True,
+               share: Optional[int] = None) -> Submission:
         """Enqueue one tenant's prompt stream; prompts are consumed
-        lazily as the scheduler admits them."""
+        lazily as the scheduler admits them.  ``share`` (when set) caps
+        THIS submission's in-flight rows below the scheduler-wide
+        share — the per-tenant max-in-flight SLO knob."""
         sub = Submission(tenant=tenant, prompts=iter(prompts), qsig=qsig,
                          probe=list(probe or []), max_new=max_new,
-                         prefix=prefix, optimize=optimize)
+                         prefix=prefix, optimize=optimize, share=share,
+                         submit_t=time.time())
         self.pending.append(sub)
         self._activate()
         return sub
@@ -514,29 +576,123 @@ class Scheduler:
             sub.engine = engine
             self.active.append(sub)
             self.pending.popleft()
+            if sub.activated_t is None:
+                sub.activated_t = time.time()
+                self.stats.tenant(sub.tenant).queue_wait.add(
+                    sub.activated_t - sub.submit_t)
+            # a quarantined submission re-activating on its replacement
+            # engine re-submits its unfinished rows (finished rows keep
+            # their outputs — only pending work is replayed)
+            if any(not r.done for r in sub.reqs):
+                self._resubmit_unfinished(sub)
 
     # -- the tick -------------------------------------------------------
     def _top_up(self, sub: Submission) -> None:
-        while len(sub.inflight) < self.share and not sub.exhausted:
+        cap = (self.share if sub.share is None
+               else max(1, min(self.share, sub.share)))
+        while len(sub.inflight) < cap and not sub.exhausted:
             p = next(sub.prompts, _EXHAUSTED)
             if p is _EXHAUSTED:
                 sub.exhausted = True
                 break
-            r = sub.engine.submit(p, max_new=sub.max_new, prefix=sub.prefix)
+            try:
+                r = sub.engine.submit(p, max_new=sub.max_new,
+                                      prefix=sub.prefix)
+            except Exception as e:
+                # the consumed prompt must not be lost: park it as an
+                # unfinished placeholder so the replacement engine
+                # replays it with the rest of the quarantined rows
+                ph = Request(rid=-1, prompt_ids=[], max_new=sub.max_new,
+                             src=p)
+                sub.reqs.append(ph)
+                self._quarantine_engine(sub.engine, e)
+                return
+            if r.src is None:
+                r.src = p
             sub.reqs.append(r)
             if r.done:          # result-cache hit: resolved instantly
                 self._record_done(sub)
             else:
                 sub.inflight.add(r.rid)
                 self._owners[(id(sub.engine), r.rid)] = sub
+                self._t0[(id(sub.engine), r.rid)] = time.time()
         sub.peak_inflight = max(sub.peak_inflight, len(sub.inflight))
 
-    def _record_done(self, sub: Submission) -> None:
+    def _record_done(self, sub: Submission, latency: float = 0.0) -> None:
         self.stats.rows += 1
         self.trace.append((self.stats.ticks, sub.tenant))
+        ts = self.stats.tenant(sub.tenant)
+        ts.rows += 1
+        ts.latency.add(latency)
         if sub.first_done_tick is None:
             sub.first_done_tick = self.stats.ticks
         sub.last_done_tick = self.stats.ticks
+
+    # -- graceful degradation -------------------------------------------
+    def _quarantine_engine(self, engine, exc: BaseException) -> None:
+        """An engine raising mid-tick poisons ONLY the submissions bound
+        to it: the entry is discarded from the pool (pins cleared), each
+        affected submission's unfinished rows are kept for replay
+        (``Request.src`` holds the prompt text) and the submission
+        re-enters the pending queue with ``optimize=False`` — the retry
+        runs on the pooled base engine, trading the compressed recipe
+        for availability.  The event lands in ``stats.events`` instead
+        of killing the tick; a submission that keeps faulting past
+        ``max_retries`` gets a terminal error (surfaced from its
+        ``results()``, like an unretryable admission failure)."""
+        eid = id(engine)
+        version = getattr(engine, "version", "?")
+        self.pool.discard(version, engine=engine)
+        victims = [s for s in self.active if s.engine is engine]
+        for sub in victims:
+            self.active.remove(sub)
+            sub.retries += 1
+            for rid in list(sub.inflight):
+                self._owners.pop((eid, rid), None)
+                self._t0.pop((eid, rid), None)
+            sub.inflight.clear()
+            sub.engine = None
+            self.stats.degradations += 1
+            self.stats.tenant(sub.tenant).degradations += 1
+            terminal = sub.retries > self.max_retries
+            self.stats.events.append({
+                "tick": self.stats.ticks, "tenant": sub.tenant,
+                "engine": version,
+                "error": f"{type(exc).__name__}: {exc}",
+                "action": "failed" if terminal else "retry_base"})
+            if terminal:
+                sub.error = exc
+                self.finished.append(sub)
+                continue
+            sub.optimize = False
+            sub.model = None
+            self.pending.appendleft(sub)
+
+    def _resubmit_unfinished(self, sub: Submission) -> None:
+        """Replay a quarantined submission's unfinished rows on its
+        replacement engine, splicing the new requests over the old ones
+        so row order (and every already-finished output) is
+        preserved."""
+        eid = id(sub.engine)
+        for i, r in enumerate(list(sub.reqs)):
+            if r.done:
+                continue
+            try:
+                nr = sub.engine.submit(r.src or "", max_new=sub.max_new,
+                                       prefix=sub.prefix)
+            except Exception as e:
+                self._quarantine_engine(sub.engine, e)
+                return
+            if nr.src is None:
+                nr.src = r.src
+            sub.reqs[i] = nr
+            if nr.done:
+                self._record_done(sub)
+            else:
+                sub.inflight.add(nr.rid)
+                self._owners[(eid, nr.rid)] = sub
+                self._t0[(eid, nr.rid)] = time.time()
+        sub.peak_inflight = max(sub.peak_inflight, len(sub.inflight))
 
     def _retire_done(self) -> None:
         still = []
@@ -552,9 +708,12 @@ class Scheduler:
         """One fair-share tick; returns True while work remains."""
         self._activate()
         self.stats.ticks += 1
-        n = len(self.active)
+        order = list(self.active)   # snapshot: quarantine may mutate
+        n = len(order)
         for i in range(n):          # rotating round-robin admission
-            self._top_up(self.active[(self._rr + i) % n])
+            sub = order[(self._rr + i) % n]
+            if sub.engine is not None:   # skip mid-tick quarantined
+                self._top_up(sub)
         if n:
             self._rr = (self._rr + 1) % n
         # one decode tick per distinct engine with work, in activation
@@ -573,7 +732,11 @@ class Scheduler:
             if not eng.has_work():
                 continue
             if hasattr(eng, "step_begin"):
-                handle = eng.step_begin()
+                try:
+                    handle = eng.step_begin()
+                except Exception as e:
+                    self._quarantine_engine(eng, e)
+                    continue
                 pending.append((eid, eng, handle))
                 # count only placements with a decode genuinely in
                 # flight: a tick whose rows all retired at admission
@@ -592,13 +755,20 @@ class Scheduler:
         self.stats.peak_concurrent_devices = max(
             self.stats.peak_concurrent_devices, len(devs))
         for eid, eng, handle in pending:
-            reqs = (eng.step() if handle is _WHOLE_STEP
-                    else eng.step_finish(handle))
+            try:
+                reqs = (eng.step() if handle is _WHOLE_STEP
+                        else eng.step_finish(handle))
+            except Exception as e:
+                self._quarantine_engine(eng, e)
+                continue
+            now = time.time()
             for req in reqs:
                 owner = self._owners.pop((eid, req.rid), None)
                 if owner is not None:
                     owner.inflight.discard(req.rid)
-                    self._record_done(owner)
+                    t0 = self._t0.pop((eid, req.rid), None)
+                    self._record_done(owner,
+                                      now - t0 if t0 is not None else 0.0)
         self._retire_done()
         self._activate()            # released pins may admit waiters
         return bool(self.active or self.pending)
@@ -616,94 +786,152 @@ class Scheduler:
         """Drive OLAP query *plans* concurrently: ``queries`` maps
         tenant -> ``Query``; each plan's LLM operators run in order,
         but operators of different tenants interleave tick-by-tick.
-        Each ``Query._ops()`` generator yields optimizer-lowered
-        ``ExecutableOp``s (olap/physical.py) carrying the per-op engine
-        choice (base vs instance-optimized recipe vs cascade), probe
-        sample, prefix template, and the dedup-wrapped prompt stream.
-        A cascade op runs as TWO submissions: every row through the
-        pooled proxy engine first, then the rows whose confidence fell
-        below the fitted threshold re-enter the scheduler as a base-
-        engine submission (proxy and base coexist under the one pool
-        budget); accepted and escalated outputs splice back in row
-        order before the plan advances.  Returns tenant -> result
-        Table."""
-        gens = {t: q._ops() for t, q in queries.items()}
-        results: Dict[str, Any] = {}
-        current: Dict[str, Submission] = {}
-        cascading: Dict[str, Dict[str, Any]] = {}   # tenant -> phase state
-
-        def advance(tenant: str, send_val) -> None:
-            try:
-                op = gens[tenant].send(send_val)
-            except StopIteration as stop:
-                results[tenant] = stop.value
-                return
-            if op.op.engine == "cascade":
-                budget = op.op.accuracy_budget or 0.0
-                cal = self.pool.session._cascade(
-                    op.qsig, op.probe, budget, max_new=op.spec.max_new)
-                prompts = list(op.spec.prompts)
-                if not np.isfinite(cal.threshold):
-                    # unsatisfiable budget: base-only, no proxy pass —
-                    # the exactness contract for accuracy_budget=0
-                    current[tenant] = self.submit(
-                        tenant, iter(prompts), qsig=op.qsig,
-                        probe=op.probe, max_new=op.spec.max_new,
-                        prefix=op.spec.prefix, optimize=False)
-                    return
-                cascading[tenant] = {"op": op, "cal": cal,
-                                     "prompts": prompts}
-                current[tenant] = self.submit(
-                    tenant, iter(prompts), qsig=op.qsig, probe=op.probe,
-                    max_new=op.spec.max_new, prefix=op.spec.prefix,
-                    optimize=True)
-                return
-            current[tenant] = self.submit(
-                tenant, op.spec.prompts, qsig=op.qsig, probe=op.probe,
-                max_new=op.spec.max_new, prefix=op.spec.prefix,
-                optimize=op.optimize)
-
-        def collect(tenant: str, sub: Submission):
-            """Finished-submission hand-off: the op's output rows, or
-            None when a cascade just queued its escalation phase."""
-            state = cascading.get(tenant)
-            if state is None:
-                return sub.results()
-            if "rejects" not in state:      # proxy phase finished
-                outs = sub.results()
-                thr = state["cal"].threshold
-                rejects = [i for i, r in enumerate(sub.reqs)
-                           if r.confidence < thr]
-                if not rejects:
-                    del cascading[tenant]
-                    return outs
-                state["outs"] = outs
-                state["rejects"] = rejects
-                op = state["op"]
-                current[tenant] = self.submit(
-                    tenant,
-                    iter([state["prompts"][i] for i in rejects]),
-                    qsig=op.qsig, probe=op.probe,
-                    max_new=op.spec.max_new, prefix=op.spec.prefix,
-                    optimize=False)
-                return None
-            outs, rejects = state["outs"], state["rejects"]
-            for i, o in zip(rejects, sub.results()):
-                outs[i] = o
-            del cascading[tenant]
-            return outs
-
+        Each plan is wrapped in a ``QueryDriver`` (the re-entrant
+        per-query state machine below, shared with the long-running
+        service); a tenant's plan failure is captured per driver and
+        re-raised here after the fleet drains, so one bad plan never
+        aborts the other tenants' queries mid-flight.  Returns
+        tenant -> result Table."""
+        drivers = {t: QueryDriver(self, t, q) for t, q in queries.items()}
         t0 = time.time()
-        for tenant in queries:
-            advance(tenant, None)
-        while current:
+        for d in drivers.values():
+            d.start()
+        while any(d.sub is not None for d in drivers.values()):
             self.step()
-            for tenant in list(current):
-                sub = current[tenant]
-                if sub.done:
-                    del current[tenant]
-                    outs = collect(tenant, sub)
-                    if outs is not None:
-                        advance(tenant, outs)
+            for d in drivers.values():
+                d.poll()
         self.stats.wall_s += time.time() - t0
-        return results
+        for d in drivers.values():
+            if d.error is not None:
+                raise d.error
+        return {t: d.result for t, d in drivers.items()}
+
+
+class QueryDriver:
+    """Drives ONE OLAP query plan through a ``Scheduler``, operator by
+    operator — the re-entrant core of ``Scheduler.run_queries``, reused
+    by the always-on service (repro/service/core.py) where query jobs
+    arrive dynamically instead of as one batch.
+
+    Each ``Query._ops()`` generator yields optimizer-lowered
+    ``ExecutableOp``s (olap/physical.py) carrying the per-op engine
+    choice (base vs instance-optimized recipe vs cascade), probe
+    sample, prefix template, and the dedup-wrapped prompt stream.  A
+    cascade op runs as TWO submissions: every row through the pooled
+    proxy engine first, then the rows whose confidence fell below the
+    fitted threshold re-enter the scheduler as a base-engine
+    submission (proxy and base coexist under the one pool budget);
+    accepted and escalated outputs splice back in row order before the
+    plan advances.
+
+    Lifecycle: ``start()`` submits the plan's first LLM op; the owner
+    ticks the scheduler and calls ``poll()`` until ``finished`` — each
+    poll collects a completed submission, advances the plan coroutine
+    and submits the next op.  Failures (a plan error or a submission's
+    terminal error) land in ``error`` instead of raising, so one
+    tenant's failure never unwinds another tenant's scheduling loop.
+    ``share`` forwards a per-tenant in-flight-row cap to every
+    submission; ``on_op_done(driver, op, outs)`` fires as each operator
+    completes (the service streams operator progress from it).
+    """
+
+    def __init__(self, sched: Scheduler, tenant: str, query, *,
+                 share: Optional[int] = None,
+                 on_op_done: Optional[Callable] = None):
+        self.sched = sched
+        self.tenant = tenant
+        self.query = query
+        self.share = share
+        self.on_op_done = on_op_done
+        self.gen = query._ops()
+        self.sub: Optional[Submission] = None
+        self.result: Any = None
+        self.error: Optional[BaseException] = None
+        self.ops_done = 0
+        self._op = None                      # ExecutableOp in flight
+        self._cascade: Optional[Dict[str, Any]] = None
+
+    @property
+    def finished(self) -> bool:
+        return self.result is not None or self.error is not None
+
+    def start(self) -> None:
+        self._advance(None)
+
+    def poll(self) -> bool:
+        """Collect a finished submission and advance the plan; returns
+        ``finished``.  Cheap while the current submission is still in
+        flight."""
+        if self.finished or self.sub is None or not self.sub.done:
+            return self.finished
+        sub, self.sub = self.sub, None
+        try:
+            outs = self._collect(sub)
+        except Exception as e:
+            self.error = e
+            return True
+        if outs is not None:
+            op, self._op = self._op, None
+            self.ops_done += 1
+            if self.on_op_done is not None:
+                self.on_op_done(self, op, outs)
+            self._advance(outs)
+        return self.finished
+
+    # -- plan coroutine plumbing ---------------------------------------
+    def _submit(self, prompts, op, *, optimize: bool) -> Submission:
+        return self.sched.submit(
+            self.tenant, prompts, qsig=op.qsig, probe=op.probe,
+            max_new=op.spec.max_new, prefix=op.spec.prefix,
+            optimize=optimize, share=self.share)
+
+    def _advance(self, send_val) -> None:
+        try:
+            op = self.gen.send(send_val)
+        except StopIteration as stop:
+            self.result = stop.value
+            return
+        except Exception as e:       # plan/table failure: capture
+            self.error = e
+            return
+        self._op = op
+        if op.op.engine == "cascade":
+            budget = op.op.accuracy_budget or 0.0
+            cal = self.sched.pool.session._cascade(
+                op.qsig, op.probe, budget, max_new=op.spec.max_new)
+            prompts = list(op.spec.prompts)
+            if not np.isfinite(cal.threshold):
+                # unsatisfiable budget: base-only, no proxy pass —
+                # the exactness contract for accuracy_budget=0
+                self.sub = self._submit(iter(prompts), op, optimize=False)
+                return
+            self._cascade = {"cal": cal, "prompts": prompts}
+            self.sub = self._submit(iter(prompts), op, optimize=True)
+            return
+        self.sub = self._submit(op.spec.prompts, op, optimize=op.optimize)
+
+    def _collect(self, sub: Submission):
+        """Finished-submission hand-off: the op's output rows, or None
+        when a cascade just queued its escalation phase."""
+        state = self._cascade
+        if state is None:
+            return sub.results()
+        if "rejects" not in state:      # proxy phase finished
+            outs = sub.results()
+            thr = state["cal"].threshold
+            rejects = [i for i, r in enumerate(sub.reqs)
+                       if r.confidence < thr]
+            if not rejects:
+                self._cascade = None
+                return outs
+            state["outs"] = outs
+            state["rejects"] = rejects
+            self.sub = self._submit(
+                iter([state["prompts"][i] for i in rejects]), self._op,
+                optimize=False)
+            return None
+        outs, rejects = state["outs"], state["rejects"]
+        for i, o in zip(rejects, sub.results()):
+            outs[i] = o
+        self._cascade = None
+        return outs

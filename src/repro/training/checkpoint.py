@@ -43,6 +43,28 @@ def _path_str(path) -> str:
     return "/".join(out)
 
 
+def _record_structure_only(tree, path, out) -> None:
+    """Collect pytree nodes a leaf-path manifest cannot represent:
+    empty dicts/lists/tuples and ``None`` leaves (jax flattening drops
+    all of them).  ``restore`` never needs this (its ``target`` carries
+    the structure); ``restore_tree`` re-inserts them so a template-free
+    load round-trips e.g. a params dict whose ``tail`` list is empty."""
+    if tree is None:
+        out.append({"path": "/".join(path), "kind": "none"})
+    elif isinstance(tree, _CONTAINERS):
+        pass
+    elif isinstance(tree, dict):
+        if not tree:
+            out.append({"path": "/".join(path), "kind": "dict"})
+        for k, v in tree.items():
+            _record_structure_only(v, path + [str(k)], out)
+    elif isinstance(tree, (list, tuple)):
+        if not tree:
+            out.append({"path": "/".join(path), "kind": "list"})
+        for i, v in enumerate(tree):
+            _record_structure_only(v, path + [str(i)], out)
+
+
 def save(ckpt_dir: str, step: int, state, *, extra: Optional[Dict] = None,
          keep: int = 3) -> str:
     """Write ``state`` (any pytree, compressed containers included)."""
@@ -51,6 +73,10 @@ def save(ckpt_dir: str, step: int, state, *, extra: Optional[Dict] = None,
     tmp = tempfile.mkdtemp(prefix="tmp.", dir=ckpt_dir)
     manifest: Dict[str, Any] = {"step": int(step), "arrays": {},
                                 "extra": extra or {}}
+    structure_only: list = []
+    _record_structure_only(state, [], structure_only)
+    if structure_only:
+        manifest["structure_only"] = structure_only
     arrays: Dict[str, np.ndarray] = {}
     for i, (path, leaf) in enumerate(flat):
         name = f"a{i}"
@@ -182,3 +208,118 @@ def restore(ckpt_dir: str, target, *, step: Optional[int] = None,
             state, shardings,
             is_leaf=lambda x: isinstance(x, _CONTAINERS))
     return state, step, manifest.get("extra", {})
+
+
+def _leaf_from_meta(meta, name, get):
+    """One manifest entry -> its runtime leaf (shared with restore)."""
+    import jax.numpy as jnp
+    if meta["kind"] == "qtensor":
+        return QTensor(
+            jnp.asarray(get(name + ".q")),
+            jnp.asarray(get(name + ".scale")),
+            meta["bits"], meta["group"], tuple(meta["shape"]),
+            jnp.asarray(get(name + ".in_scale"))
+            if meta.get("has_in_scale") else None)
+    if meta["kind"] == "blocksparse":
+        return BlockSparseTensor(
+            jnp.asarray(get(name + ".w")),
+            jnp.asarray(get(name + ".mask")), meta["bs"],
+            jnp.asarray(get(name + ".idx"))
+            if meta.get("has_idx") else None)
+    if meta["kind"] == "qembed":
+        return QEmbed(jnp.asarray(get(name + ".q")),
+                      jnp.asarray(get(name + ".scale")))
+    return jnp.asarray(get(name))
+
+
+def restore_tree(ckpt_dir: str, *, step: Optional[int] = None,
+                 verify: bool = True) -> Tuple[Any, int, Dict]:
+    """Structure-free restore: rebuild the pytree from the manifest's
+    recorded key paths alone, no ``target`` template needed.
+
+    ``restore`` requires the caller to already hold a pytree with the
+    right structure — fine for a trainer resuming its own state, wrong
+    for a *warm-restarting service* (repro/service/checkpoint.py) that
+    must reload compressed models it has never built in this process.
+    Key paths are re-nested from the manifest's ``path`` strings;
+    dicts whose keys are exactly ``0..n-1`` (as strings) were sequence
+    entries and convert back to lists.  Leaf reconstruction (QTensor /
+    BlockSparseTensor / QEmbed / array) is byte-identical to
+    ``restore``'s.
+    """
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    npz_path = os.path.join(d, "arrays.npz")
+    if verify:
+        with open(npz_path, "rb") as f:
+            h = hashlib.sha256(f.read()).hexdigest()
+        if h != manifest["sha256"]:
+            raise IOError(f"checkpoint {d} corrupt: hash mismatch")
+    data = np.load(npz_path)
+    bf16 = set(manifest.get("bf16", []))
+
+    def get(name):
+        a = data[name]
+        if name in bf16:
+            import ml_dtypes
+            a = a.view(ml_dtypes.bfloat16)
+        return a
+
+    root: Dict[str, Any] = {}
+
+    def insert(parts, value):
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+
+    for name, meta in manifest["arrays"].items():
+        parts = meta["path"].split("/") if meta["path"] else []
+        leaf = _leaf_from_meta(meta, name, get)
+        if not parts:               # scalar/array state: the tree IS it
+            return leaf, step, manifest.get("extra", {})
+        insert(parts, leaf)
+    # re-insert what leaf flattening dropped: empty containers + Nones
+    for s in manifest.get("structure_only", []):
+        value = {"none": None, "dict": {}, "list": []}[s["kind"]]
+        parts = s["path"].split("/") if s["path"] else []
+        if not parts:
+            return value, step, manifest.get("extra", {})
+        insert(parts, value)
+
+    def listify(node):
+        if not isinstance(node, dict):
+            return node
+        out = {k: listify(v) for k, v in node.items()}
+        keys = list(out)
+        if keys and all(k.isdigit() for k in keys):
+            idx = sorted(int(k) for k in keys)
+            if idx == list(range(len(idx))):
+                return [out[str(i)] for i in idx]
+        return out
+
+    return listify(root), step, manifest.get("extra", {})
+
+
+def atomic_write_json(path: str, obj: Any) -> None:
+    """Crash-safe JSON write: temp file in the destination directory,
+    flush + fsync, then ``os.replace`` — readers only ever see the old
+    or the complete new content.  The service's warm-state manifest
+    writer (non-array state: recipes, cascade thresholds, residency)."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(prefix=".tmp.", dir=d)
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise

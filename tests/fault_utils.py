@@ -1,0 +1,86 @@
+"""Fault-injection helpers for the serving/service tests.
+
+``FlakyEngine`` wraps any engine and raises an injected exception on
+the Nth ``step()`` call or the Nth ``submit()`` — the two places a real
+engine can die mid-tick (device OOM, kernel failure, a poisoned jit
+cache).  It deliberately does NOT forward ``step_begin``/
+``step_finish``: the scheduler then drives it through the whole-step
+fallback path, whose ``step()`` is the exact composition of the split
+protocol, so the quarantine behavior under test is the same one a real
+mid-decode fault would hit.
+
+``flaky_pool`` builds the FakeSession/ModelPool pair from
+tests/test_scheduler.py but lets the caller plant faults per model
+version.  Only the FIRST engine built for a version is flaky — a
+rebuild after quarantine is the recovered replacement — which mirrors
+the transient-fault story the scheduler's retry path exists for.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.serving.scheduler import ModelPool
+
+from test_scheduler import FakeEngine, FakeSession
+
+
+class FlakyEngine:
+    """Engine wrapper raising on the Nth step()/submit() (1-based)."""
+
+    def __init__(self, inner, *, fail_on_step: Optional[int] = None,
+                 fail_on_submit: Optional[int] = None,
+                 exc_type=RuntimeError):
+        self.inner = inner
+        self.version = inner.version
+        self.fail_on_step = fail_on_step
+        self.fail_on_submit = fail_on_submit
+        self.exc_type = exc_type
+        self.steps = 0
+        self.submits = 0
+        self.fired = False
+
+    def submit(self, text, *, max_new=8, prefix=None):
+        self.submits += 1
+        if self.submits == self.fail_on_submit:
+            self.fired = True
+            raise self.exc_type(
+                f"injected fault: submit #{self.submits} on "
+                f"{self.version}")
+        return self.inner.submit(text, max_new=max_new, prefix=prefix)
+
+    def has_work(self):
+        return self.inner.has_work()
+
+    def step(self):
+        self.steps += 1
+        if self.steps == self.fail_on_step:
+            self.fired = True
+            raise self.exc_type(
+                f"injected fault: step #{self.steps} on {self.version}")
+        return self.inner.step()
+
+
+def flaky_pool(sizes: Dict[str, int], budget: int, *, slots: int = 2,
+               faults: Optional[Dict[str, Dict]] = None):
+    """(session, pool, engines-by-version) with planted faults.
+
+    ``faults`` maps version -> FlakyEngine kwargs (``fail_on_step=`` /
+    ``fail_on_submit=``); e.g. ``{"q1": {"fail_on_step": 2}}`` makes
+    the first engine built for model ``q1`` die on its second decode
+    tick.  ``sizes`` must include every version the test will admit
+    (including ``"base"`` when quarantine retries are expected).
+    """
+    sess = FakeSession(sizes)
+    built: Dict[str, List] = {}
+
+    def factory(m):
+        e = FakeEngine(m.version, slots=slots)
+        kw = (faults or {}).get(m.version)
+        if kw and m.version not in built:
+            e = FlakyEngine(e, **kw)
+        built.setdefault(m.version, []).append(e)
+        return e
+
+    pool = ModelPool(sess, budget, engine_factory=factory,
+                     entry_bytes=lambda m: sizes[m.version])
+    return sess, pool, built

@@ -1,0 +1,477 @@
+"""The always-on service layer (src/repro/service): reservoir metrics,
+SLO admission, fault quarantine-and-retry, the plan wire format, the
+HTTP end-to-end contract, and warm restart in a fresh process.
+
+The headline assertions mirror the subsystem's contracts:
+
+  * HTTP-path rows are byte-identical to ``Scheduler.run_queries``
+    for the same plan spec;
+  * per-tenant in-flight rows never exceed the SLO cap under random
+    admission/release interleavings (deterministic here; the
+    hypothesis variant lives in tests/test_service_props.py);
+  * an engine fault mid-run quarantines, retries on the base engine,
+    and yields the SAME rows as a clean run, with the degradation
+    recorded in stats;
+  * a killed-and-restarted "server" (fresh subprocess, warm-state
+    restore) answers a previously seen query with ZERO recalibrations
+    and identical recipes.
+"""
+import dataclasses
+import json
+import os
+import random
+import statistics
+import subprocess
+import sys
+import textwrap
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core.pipeline import Recipe
+from repro.olap import plan as PLAN
+from repro.olap.query import IOLMSession, Query, query_from_spec
+from repro.olap.table import Table
+from repro.serving.metrics import Reservoir, render_stats
+from repro.serving.scheduler import Scheduler
+from repro.service import (SemanticQueryService, ServiceClient, TenantSLO,
+                           save_warm_state, serve)
+from repro.service.client import QueryError, ShedError
+from repro.service.core import table_rows
+from repro.service.slo import AdmissionController
+
+from fault_utils import flaky_pool
+from test_scheduler import W8
+
+ENGINE_KW = dict(slots=2, max_len=64, buckets=(16, 48))
+
+
+def make_session(tiny, **kw):
+    cfg, params = tiny
+    kw.setdefault("recipes", [W8])
+    kw.setdefault("calib_rows", 4)
+    kw.setdefault("eval_rows", 2)
+    kw.setdefault("engine_kw", dict(ENGINE_KW))
+    return IOLMSession(params, cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# reservoir percentile estimator
+# ---------------------------------------------------------------------------
+
+class TestReservoir:
+    def test_exact_below_capacity(self):
+        """Un-overflowed reservoir == statistics.quantiles exactly."""
+        rng = random.Random(7)
+        data = [rng.uniform(0, 50) for _ in range(101)]
+        r = Reservoir(capacity=512)
+        for x in data:
+            r.add(x)
+        assert r.quantile(0.5) == pytest.approx(
+            statistics.quantiles(data, n=2, method="inclusive")[0])
+        assert r.quantile(0.95) == pytest.approx(
+            statistics.quantiles(data, n=20, method="inclusive")[18])
+        assert r.quantile(0.99) == pytest.approx(
+            statistics.quantiles(data, n=100, method="inclusive")[98])
+        assert r.count == 101
+        assert r.vmin == min(data) and r.vmax == max(data)
+
+    def test_deterministic_beyond_capacity(self):
+        """Same stream -> same sample: the sampler owns its RNG."""
+        r1, r2 = Reservoir(capacity=64), Reservoir(capacity=64)
+        for i in range(2000):
+            x = float(i * 37 % 1000)
+            r1.add(x)
+            r2.add(x)
+        assert r1.sample == r2.sample
+        assert r1.count == r2.count == 2000
+
+    def test_overflow_estimate_within_tolerance(self):
+        """256-sample reservoir over a 10k uniform stream: the p50
+        estimate stays within a few std-errors of the true median."""
+        rng = random.Random(3)
+        data = [rng.uniform(0, 1000) for _ in range(10000)]
+        r = Reservoir(capacity=256)
+        for x in data:
+            r.add(x)
+        exact = statistics.quantiles(data, n=10, method="inclusive")
+        # rank tolerance: the estimate must land between the exact
+        # p30 and p70 (±0.2 rank ≈ ±6 sigma for a 256 sample)
+        assert exact[2] <= r.quantile(0.5) <= exact[6]
+        assert r.count == 10000
+
+    def test_empty_and_tiny(self):
+        r = Reservoir()
+        assert r.quantile(0.5) is None
+        assert r.as_dict()["p95"] is None
+        r.add(4.0)
+        assert r.quantile(0.5) == r.quantile(0.99) == 4.0
+        with pytest.raises(ValueError):
+            Reservoir(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# SLO admission control
+# ---------------------------------------------------------------------------
+
+class TestAdmission:
+    def test_inflight_rows_never_exceed_cap(self):
+        """Random admit/release interleavings: the cap is an invariant,
+        and the controller's ledger matches an independent one."""
+        rng = random.Random(0)
+        cap = 10
+        ac = AdmissionController(
+            {"t": TenantSLO(max_inflight_rows=cap, max_queries=10 ** 6)})
+        live = []
+        admitted = shed = 0
+        for _ in range(800):
+            if live and rng.random() < 0.45:
+                ac.release("t", live.pop(rng.randrange(len(live))))
+            else:
+                rows = rng.randint(1, 6)
+                if ac.try_admit("t", rows, 0.0) is None:
+                    live.append(rows)
+                    admitted += 1
+                else:
+                    shed += 1
+            cur = ac.inflight_rows("t")
+            assert cur == sum(live)
+            assert cur <= cap
+        snap = ac.snapshot()["t"]
+        assert snap["admitted"] == admitted and snap["shed"] == shed
+
+    def test_token_bucket_refills_on_injected_clock(self):
+        now = [0.0]
+        ac = AdmissionController(
+            {"t": TenantSLO(max_inflight_rows=100, max_queries=100,
+                            token_budget=10.0, refill_per_s=5.0)},
+            clock=lambda: now[0])
+        assert ac.try_admit("t", 1, 8.0) is None        # 10 -> 2
+        shed = ac.try_admit("t", 1, 8.0)                # 2 < 8: shed
+        assert shed is not None and shed.reason == "token_budget"
+        assert shed.retry_after_s == pytest.approx(6.0 / 5.0)
+        now[0] += 2.0                                   # +10, cap at 10
+        assert ac.try_admit("t", 1, 8.0) is None
+
+    def test_max_queries_cap(self):
+        ac = AdmissionController(
+            {"t": TenantSLO(max_inflight_rows=100, max_queries=1)})
+        assert ac.try_admit("t", 1, 0.0) is None
+        shed = ac.try_admit("t", 1, 0.0)
+        assert shed is not None and shed.reason == "max_queries"
+        ac.release("t", 1)
+        assert ac.try_admit("t", 1, 0.0) is None
+
+    def test_shed_charges_nothing(self):
+        ac = AdmissionController(
+            {"t": TenantSLO(max_inflight_rows=5, max_queries=10)})
+        assert ac.try_admit("t", 4, 0.0) is None
+        assert ac.try_admit("t", 4, 0.0) is not None    # would exceed
+        assert ac.inflight_rows("t") == 4               # nothing charged
+
+
+# ---------------------------------------------------------------------------
+# fault injection: quarantine-and-retry degradation
+# ---------------------------------------------------------------------------
+
+class TestQuarantine:
+    PROMPTS = ["alpha", "br", "charlie", "dx", "echo!"]
+
+    def _clean_rows(self):
+        sess, pool, _ = flaky_pool({"q": 20, "base": 20}, budget=100)
+        sched = Scheduler(pool, share=4)
+        s = sched.submit("t", list(self.PROMPTS), qsig="q")
+        sched.run()
+        return s.results()
+
+    def test_step_fault_retries_to_clean_rows(self):
+        clean = self._clean_rows()
+        sess, pool, built = flaky_pool(
+            {"q": 20, "base": 20}, budget=100,
+            faults={"q": {"fail_on_step": 2}})
+        sched = Scheduler(pool, share=4)
+        s = sched.submit("t", list(self.PROMPTS), qsig="q")
+        sched.run()
+        assert s.done and s.error is None
+        assert s.results() == clean
+        assert built["q"][0].fired          # the fault really happened
+        # ...and it is observable, not silent
+        assert sched.stats.degradations == 1
+        ev = sched.stats.events[0]
+        assert ev["action"] == "retry_base" and ev["tenant"] == "t"
+        assert "injected fault" in ev["error"]
+        assert sched.stats.tenants["t"].degradations == 1
+        assert "q" not in pool.resident_versions    # quarantined out
+
+    def test_submit_fault_retries_to_clean_rows(self):
+        clean = self._clean_rows()
+        sess, pool, built = flaky_pool(
+            {"q": 20, "base": 20}, budget=100,
+            faults={"q": {"fail_on_submit": 2}})
+        sched = Scheduler(pool, share=4)
+        s = sched.submit("t", list(self.PROMPTS), qsig="q")
+        sched.run()
+        assert s.done and s.error is None
+        assert s.results() == clean
+        assert sched.stats.degradations == 1
+
+    def test_retry_budget_exhaustion_is_terminal(self):
+        """Replacement engine faulting too: bounded retries, then the
+        submission fails alone with the error surfaced."""
+        sess, pool, _ = flaky_pool(
+            {"q": 20, "base": 20}, budget=100,
+            faults={"q": {"fail_on_step": 1},
+                    "base": {"fail_on_step": 1}})
+        sched = Scheduler(pool, share=4, max_retries=1)
+        s = sched.submit("t", list(self.PROMPTS), qsig="q")
+        sched.run()                          # must not raise
+        assert s.done and s.error is not None
+        assert sched.stats.events[-1]["action"] == "failed"
+        with pytest.raises(RuntimeError):
+            s.results()
+
+    def test_innocent_tenant_unaffected_by_fault(self):
+        sess, pool, _ = flaky_pool(
+            {"q": 20, "ok": 20, "base": 20}, budget=100,
+            faults={"q": {"fail_on_step": 2}})
+        sched = Scheduler(pool, share=4)
+        s1 = sched.submit("t1", list(self.PROMPTS), qsig="q")
+        s2 = sched.submit("t2", ["x", "yy", "zzz"], qsig="ok")
+        sched.run()
+        assert s1.done and s1.error is None
+        assert s2.done and s2.error is None
+        assert s2.results() == ["out(x)", "out(yy)", "out(zzz)"]
+        assert sched.stats.tenants["t2"].degradations == 0
+
+
+# ---------------------------------------------------------------------------
+# plan <-> JSON wire format
+# ---------------------------------------------------------------------------
+
+class TestSpecRoundTrip:
+    SESS = SimpleNamespace(pool=None, backend="auto")
+
+    def _query(self):
+        t = Table({"city": ["ab", "cdef", "gh"], "pop": [1, 9, 4]})
+        return (Query(t, self.SESS, cascade_budget=0.2, cascade="off")
+                .filter(PLAN.ColumnPredicate("pop", "ge", 4),
+                        columns=["pop"])
+                .llm_map("city", prompt="Summarize: ", out_col="s",
+                         max_new=6)
+                .llm_filter("city", prompt="Keep? ", max_new=4)
+                .select(["city", "s"]))
+
+    def test_roundtrip_is_fixpoint(self):
+        spec = self._query().to_spec()
+        wire = json.loads(json.dumps(spec))      # actual wire trip
+        q2 = query_from_spec(wire, self.SESS)
+        assert q2.to_spec() == spec
+        assert PLAN.render(q2._root) == PLAN.render(self._query()._root)
+
+    def test_join_and_correct_roundtrip(self):
+        t = Table({"name": ["aa", "bb"]})
+        right = Table({"ref": ["aa!", "zz"]})
+        q = (Query(t, self.SESS)
+             .llm_correct("name", prompt="Fix: ", max_new=5)
+             .llm_join(right, ("name", "ref"), prompt="Same? ",
+                       max_new=4, accuracy_budget=0.1))
+        spec = json.loads(json.dumps(q.to_spec()))
+        assert query_from_spec(spec, self.SESS).to_spec() == q.to_spec()
+
+    def test_opaque_callables_refuse_serialization(self):
+        t = Table({"a": ["x"]})
+        with pytest.raises(ValueError, match="opaque"):
+            Query(t, self.SESS).filter(lambda r: True).to_spec()
+        with pytest.raises(ValueError, match="keep"):
+            Query(t, self.SESS).llm_filter(
+                "a", prompt="p", keep=lambda s: True).to_spec()
+
+    def test_malformed_specs_rejected(self):
+        with pytest.raises(ValueError, match="version"):
+            query_from_spec({"version": 99, "table": {"columns": {}},
+                             "ops": []}, self.SESS)
+        with pytest.raises(ValueError, match="unknown query spec op"):
+            query_from_spec({"version": 1,
+                             "table": {"columns": {"a": ["x"]}},
+                             "ops": [{"op": "drop_table"}]}, self.SESS)
+        with pytest.raises(ValueError, match="predicate op"):
+            PLAN.ColumnPredicate("a", "regex", "x")
+
+
+# ---------------------------------------------------------------------------
+# HTTP end-to-end (real tiny model; one server for the class)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny(tiny_dense):
+    return tiny_dense
+
+
+def demo_spec(rows=4, optimize=True):
+    sess = SimpleNamespace(pool=None, backend="auto")
+    langs = ["pyton", "javascrpt", "golang", "rst", "kotln",
+             "hskell"][:rows]
+    return (Query(Table({"lang": langs}), sess, optimize=optimize)
+            .llm_correct("lang", max_new=6).to_spec())
+
+
+@pytest.fixture(scope="module")
+def served(tiny):
+    sess = make_session(tiny, pool_budget=64 * 1024 * 1024)
+    svc = SemanticQueryService(
+        sess,
+        slos={"capped": TenantSLO(max_inflight_rows=1, max_queries=2)},
+        default_slo=TenantSLO(max_inflight_rows=256, max_queries=8))
+    server, thread = serve(svc, port=0, block=False)
+    host, port = server.server_address[:2]
+    try:
+        yield svc, ServiceClient(host, port, max_retries=0)
+    finally:
+        server.shutdown()
+        server.server_close()
+        svc.stop()
+
+
+class TestServiceHTTP:
+    def test_healthz(self, served):
+        svc, client = served
+        h = client.healthz()
+        assert h["ok"] is True and h["uptime_s"] >= 0
+
+    def test_http_rows_match_run_queries(self, served, tiny):
+        """THE acceptance bar: the HTTP path and a direct
+        Scheduler.run_queries call produce byte-identical rows for the
+        same plan spec."""
+        svc, client = served
+        spec = demo_spec(rows=4)
+        got = client.query("t1", spec)
+        ref_sess = make_session(tiny, pool_budget=64 * 1024 * 1024)
+        res = Scheduler(ref_sess.pool, share=8).run_queries(
+            {"t1": query_from_spec(spec, ref_sess)})
+        assert got == table_rows(res["t1"])
+        assert len(got) == 4 and "lang_fixed" in got[0]
+
+    def test_streaming_order_and_event_schema(self, served):
+        svc, client = served
+        events = list(client.iter_query("t2", demo_spec(rows=3)))
+        kinds = [e["event"] for e in events]
+        assert kinds[-1] == "done"
+        ops = [e for e in events if e["event"] == "op"]
+        rows = [e for e in events if e["event"] == "row"]
+        assert len(ops) >= 1 and {"kind", "qsig", "rows"} <= set(ops[0])
+        # rows stream strictly in index order, after every op event
+        assert [e["index"] for e in rows] == list(range(len(rows)))
+        assert kinds.index("row") > kinds.index("op")
+        assert events[-1]["rows"] == len(rows) == 3
+
+    def test_slo_shed_is_429_with_retry_after(self, served):
+        svc, client = served
+        shed_before = svc.shed
+        with pytest.raises(ShedError) as ei:
+            client.query("capped", demo_spec(rows=4))   # 4 rows > cap 1
+        assert ei.value.verdict["reason"] == "max_inflight_rows"
+        assert float(ei.value.verdict["retry_after_s"]) > 0
+        assert svc.shed > shed_before
+        assert svc.stats_dict()["admission"]["capped"]["shed"] >= 1
+
+    def test_stats_schema_and_percentiles(self, served):
+        svc, client = served
+        client.query("t1", demo_spec(rows=3))           # ensure traffic
+        stats = client.stats()
+        assert {"service", "scheduler", "admission", "pool",
+                "session"} <= set(stats)
+        assert stats["service"]["queries"] >= 1
+        t1 = stats["scheduler"]["tenants"]["t1"]
+        for hist in (t1["latency"], t1["queue_wait"]):
+            assert {"count", "mean", "p50", "p95", "p99"} <= set(hist)
+            assert hist["count"] > 0 and hist["p50"] is not None
+            assert hist["p50"] <= hist["p95"] <= hist["p99"]
+        assert stats["session"]["recalibrations"] >= 1
+        text = client.stats_text()
+        assert "SERVICE STATS" in text and "tenants:" in text
+        assert render_stats(stats) == text
+
+    def test_malformed_spec_is_400(self, served):
+        svc, client = served
+        with pytest.raises(QueryError, match="HTTP 400"):
+            client.query("t1", {"version": 99, "table": {"columns": {}},
+                                "ops": []})
+
+    def test_checkpoint_endpoint(self, served, tmp_path):
+        svc, client = served
+        client.query("t1", demo_spec(rows=3))
+        out = client.checkpoint(str(tmp_path / "warm"))
+        assert out["ok"] is True
+        manifest = json.load(
+            open(tmp_path / "warm" / "service_state.json"))
+        assert manifest["version"] == 1 and manifest["models"]
+
+
+# ---------------------------------------------------------------------------
+# warm restart in a fresh process namespace
+# ---------------------------------------------------------------------------
+
+RESTART_SCRIPT = textwrap.dedent("""
+    import json, sys
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.core.pipeline import Recipe
+    from repro.models import api
+    from repro.olap.query import IOLMSession, query_from_spec
+    from repro.service.checkpoint import restore_warm_state
+    from repro.service.core import table_rows
+
+    payload = json.load(open(sys.argv[1]))
+    cfg = ModelConfig(**payload["cfg"])
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    sess = IOLMSession(
+        params, cfg,
+        recipes=[Recipe(name="w8", wbits=8, quant_method="absmax")],
+        calib_rows=4, eval_rows=2, engine_kw=payload["engine_kw"],
+        pool_budget=64 * 1024 * 1024)
+    restore_warm_state(sess, payload["ckpt"])
+    assert sess.recalibrations == 0 and sess.cascade_fits == 0
+    recipes = {f"{q}|{d}": m.recipe.name
+               for (q, d), m in sess.model_cache._d.items()}
+    assert recipes == payload["recipes"], (recipes, payload["recipes"])
+    q = query_from_spec(payload["spec"], sess)
+    rows = table_rows(q.run())
+    assert sess.recalibrations == 0, \\
+        f"restart recalibrated: {sess.recalibrations}"
+    assert sess.cascade_fits == 0, \\
+        f"restart re-fit cascade: {sess.cascade_fits}"
+    assert rows == payload["rows"], (rows, payload["rows"])
+    print("WARM-RESTART-OK")
+""")
+
+
+class TestWarmRestart:
+    def test_restart_answers_seen_query_without_recalibration(
+            self, tiny, tmp_path):
+        cfg, params = tiny
+        sess = make_session(tiny, pool_budget=64 * 1024 * 1024)
+        q = (Query(Table({"lang": ["pyton", "javascrpt", "golang"]}),
+                   sess, cascade="force")
+             .llm_correct("lang", max_new=6, accuracy_budget=0.5))
+        spec = q.to_spec()
+        rows = table_rows(q.run())
+        assert sess.recalibrations >= 1 and sess.cascade_fits >= 1
+        ckpt = str(tmp_path / "warm")
+        save_warm_state(sess, ckpt)
+        payload = {
+            "ckpt": ckpt, "spec": spec, "rows": rows,
+            "cfg": dataclasses.asdict(cfg),
+            "engine_kw": dict(ENGINE_KW),
+            "recipes": {f"{k[0]}|{k[1]}": m.recipe.name
+                        for k, m in sess.model_cache._d.items()},
+        }
+        ppath = tmp_path / "payload.json"
+        ppath.write_text(json.dumps(payload))
+        env = dict(os.environ, JAX_PLATFORMS="cpu",
+                   PYTHONPATH=os.path.join(os.path.dirname(__file__),
+                                           "..", "src"))
+        proc = subprocess.run(
+            [sys.executable, "-c", RESTART_SCRIPT, str(ppath)],
+            capture_output=True, text=True, timeout=600, env=env)
+        assert proc.returncode == 0, proc.stderr[-4000:]
+        assert "WARM-RESTART-OK" in proc.stdout

@@ -30,6 +30,7 @@ DOCS = [
     "src/repro/distributed/README.md",
     "src/repro/olap/README.md",
     "src/repro/analysis/README.md",
+    "src/repro/service/README.md",
     "ROADMAP.md",
     "CHANGES.md",
 ]
